@@ -1,0 +1,40 @@
+"""Paper §5.2/5.3 table: monotonicity + minimal-disruption movement
+fractions, including the power-of-two boundary where the tree changes depth
+(the regime BinomialHash's minor-tree fold exists for)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, keyset, rows_to_csv
+from repro.core import make
+
+ENGINES = ["binomial", "jump", "anchor-lifo", "dx-lifo", "fliphash-recon", "jumpback-recon", "modulo"]
+TRANSITIONS = [(7, 8), (8, 9), (11, 12), (15, 16), (16, 17), (100, 101), (1000, 1001)]
+
+
+def main() -> list[list]:
+    keys = keyset(20000)
+    rows = []
+    for name in ENGINES:
+        for n0, n1 in TRANSITIONS:
+            eng = make(name, n0)
+            before = [eng.get_bucket(k) for k in keys]
+            while eng.size < n1:
+                eng.add_bucket()
+            after = [eng.get_bucket(k) for k in keys]
+            moved = sum(b != a for b, a in zip(before, after))
+            clean = sum(b != a and a >= n0 for b, a in zip(before, after))
+            frac = moved / len(keys)
+            ideal = (n1 - n0) / n1
+            monotone = moved == clean
+            rows.append([name, n0, n1, round(frac, 4), round(ideal, 4), monotone])
+            emit(
+                f"disruption/{name}/{n0}->{n1}", 0.0,
+                f"moved={frac:.4f};ideal={ideal:.4f};monotone={monotone}",
+            )
+    rows_to_csv(
+        "bench_disruption", ["engine", "n0", "n1", "moved_frac", "ideal_frac", "monotone"], rows
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import csv
+import os
+import random
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def rows_to_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py contract: ``name,us_per_call,derived`` lines."""
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def time_loop(fn, iters: int, warmup: int = 3) -> float:
+    """Median-of-3 wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn()
+    best = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best.append((time.perf_counter() - t0) / iters * 1e6)
+    best.sort()
+    return best[1]
+
+
+def keyset(n: int, seed: int = 42) -> list[int]:
+    rng = random.Random(seed)
+    return [rng.getrandbits(64) for _ in range(n)]

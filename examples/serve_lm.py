@@ -1,0 +1,14 @@
+"""Example: serve batched requests across replicas with BinomialHash session
+routing, then kill a replica and watch only its sessions move.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "stablelm-3b", "--replicas", "3", "--requests", "18",
+                     "--fail-replica", "1"]
+    main()

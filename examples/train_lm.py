@@ -1,0 +1,20 @@
+"""Example: train a ~100M-param LM for a few hundred steps with the full
+substrate (CH-sharded data, checkpoint/auto-resume, cosine schedule).
+
+    PYTHONPATH=src python examples/train_lm.py            # quick demo
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --preset 100m
+
+This is a thin veneer over the production driver (repro.launch.train) so the
+example exercises exactly the deployed code path.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += [
+            "--arch", "qwen2.5-14b", "--preset", "smoke", "--steps", "30",
+            "--batch", "8", "--seq", "64", "--ckpt-dir", "/tmp/repro_example_ckpt",
+        ]
+    main()

@@ -1,0 +1,2 @@
+"""repro — BinomialHash consistent hashing as the placement/routing substrate
+of a multi-pod JAX training/inference framework. See README.md / DESIGN.md."""

@@ -1,0 +1,124 @@
+"""Vectorised u32 BinomialHash in JAX — the on-device bulk lookup.
+
+This is the datapath flavour (DESIGN.md §3): murmur3 fmix32 mixers, the
+scalar early-exit rejection loop replaced by an ω-unrolled masked blend
+(every lane runs all ω iterations; ``where`` masks select the first accepting
+one).  Bit-exact against ``repro.core.binomial.binomial_lookup32`` — tests
+enforce this for all shapes/dtypes/n.
+
+Two entry points:
+* ``binomial_lookup_vec(keys, n, omega)``   — n static (constant-folded masks)
+* ``binomial_lookup_dyn(keys, n, omega)``   — n traced (elastic clusters
+  without recompilation; masks derived with a shift-or cascade)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN32 = np.uint32(0x9E3779B9)
+
+
+def mix32(h: jax.Array) -> jax.Array:
+    """murmur3 fmix32, elementwise on uint32."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_iter(key: jax.Array, i) -> jax.Array:
+    """hash^i(key) — i may be a python int or a traced uint32 scalar."""
+    i32 = jnp.asarray(i, dtype=jnp.uint32)
+    return mix32(key.astype(jnp.uint32) + i32 * GOLDEN32)
+
+
+def hash_pair(h: jax.Array, f: jax.Array) -> jax.Array:
+    return mix32(h.astype(jnp.uint32) ^ mix32(f.astype(jnp.uint32) + GOLDEN32))
+
+
+def highest_one_bit_index(b: jax.Array) -> jax.Array:
+    """floor(log2 b) for b >= 1, exact for all u32 (shift-or + popcount)."""
+    b = b.astype(jnp.uint32)
+    b = b | (b >> 1)
+    b = b | (b >> 2)
+    b = b | (b >> 4)
+    b = b | (b >> 8)
+    b = b | (b >> 16)
+    v = b - ((b >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    v = (v * np.uint32(0x01010101)) >> 24
+    return v - np.uint32(1)
+
+
+def relocate_within_level(b: jax.Array, h: jax.Array) -> jax.Array:
+    """Alg. 2 vectorised: uniform relocation of b within its tree level."""
+    b = b.astype(jnp.uint32)
+    d = highest_one_bit_index(jnp.maximum(b, np.uint32(1)))
+    top = np.uint32(1) << d
+    f = top - np.uint32(1)
+    i = hash_pair(h, f) & f
+    return jnp.where(b < 2, b, top + i)
+
+
+def _unrolled_body(keys_u32: jax.Array, E: jax.Array, M: jax.Array, n_u32: jax.Array, omega: int):
+    """Shared ω-unrolled core. E/M/n may be python ints or traced scalars."""
+    h0 = hash_iter(keys_u32, 0)
+    # Blocks A and C share the same expression over the ORIGINAL hash h0:
+    # relocate(h0 & (M-1), h0) — compute once.
+    fold = relocate_within_level(h0 & (M - np.uint32(1)), h0)
+    result = jnp.zeros_like(keys_u32)
+    found = jnp.zeros(keys_u32.shape, dtype=bool)
+    hi = h0
+    for i in range(omega):
+        b = hi & (E - np.uint32(1))
+        c = relocate_within_level(b, hi)
+        in_a = c < M
+        in_b = c < n_u32
+        newly = (~found) & (in_a | in_b)
+        val = jnp.where(in_a, fold, c)
+        result = jnp.where(newly, val, result)
+        found = found | in_a | in_b
+        if i + 1 < omega:
+            hi = hash_iter(keys_u32, i + 1)
+    # Block C for lanes that never accepted.
+    return jnp.where(found, result, fold)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "omega"))
+def binomial_lookup_vec(keys: jax.Array, n: int, omega: int = 16) -> jax.Array:
+    """Bulk lookup, n static: keys[..] (any int dtype) -> int32 buckets in [0, n)."""
+    keys_u32 = keys.astype(jnp.uint32)
+    if n <= 1:
+        return jnp.zeros(keys.shape, dtype=jnp.int32)
+    l = (n - 1).bit_length()
+    E = np.uint32(1 << l)
+    M = np.uint32(1 << (l - 1))
+    out = _unrolled_body(keys_u32, E, M, np.uint32(n), omega)
+    return out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("omega",))
+def binomial_lookup_dyn(keys: jax.Array, n: jax.Array, omega: int = 16) -> jax.Array:
+    """Bulk lookup with traced n (elastic cluster size, no recompile)."""
+    keys_u32 = keys.astype(jnp.uint32)
+    n_u32 = jnp.asarray(n, dtype=jnp.uint32)
+    # E = next_pow2(n) via shift-or cascade on (n-1); M = E/2.
+    m = n_u32 - np.uint32(1)
+    m = m | (m >> 1)
+    m = m | (m >> 2)
+    m = m | (m >> 4)
+    m = m | (m >> 8)
+    m = m | (m >> 16)
+    E = m + np.uint32(1)
+    M = E >> 1
+    out = _unrolled_body(keys_u32, E, M, n_u32, omega)
+    out = jnp.where(n_u32 <= 1, np.uint32(0), out)
+    return out.astype(jnp.int32)

@@ -1,0 +1,124 @@
+"""Integer mixing / bit-twiddling primitives for the consistent-hash suite.
+
+Two parallel families:
+
+* ``u64``  — host-side (pure Python) 64-bit arithmetic, paper-faithful
+  (the paper's reference implementations are Java ``long``).  Mixers are
+  splitmix64 finalizers (Steele et al.), a standard strong 64-bit mixer.
+* ``u32``  — device-side (JAX/Pallas) 32-bit arithmetic, since TPUs have no
+  native 64-bit integer datapath.  Mixers are murmur3 ``fmix32`` finalizers.
+
+Both families provide:
+  mix(x)            strong avalanche finalizer
+  hash_iter(key, i) the i-th hash of the key (the paper's ``hash^i``)
+  hash_pair(h, f)   the two-argument hash used by ``relocateWithinLevel``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+
+GOLDEN64 = 0x9E3779B97F4A7C15
+GOLDEN32 = 0x9E3779B9
+
+# ---------------------------------------------------------------------------
+# u64 host-side family (pure python ints)
+# ---------------------------------------------------------------------------
+
+
+def mix64(z: int) -> int:
+    """splitmix64 finalizer — full-avalanche 64-bit mixer."""
+    z &= MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def hash_iter64(key: int, i: int) -> int:
+    """The paper's hash^i(key): an indexed family of independent hashes."""
+    return mix64((key + i * GOLDEN64) & MASK64)
+
+
+def hash_pair64(h: int, f: int) -> int:
+    """Two-argument hash(h, f) used by relocateWithinLevel (Alg. 2 line 7)."""
+    return mix64(h ^ mix64((f + GOLDEN64) & MASK64))
+
+
+def highest_one_bit_index(b: int) -> int:
+    """Index of the highest set bit (floor(log2 b)) for b >= 1."""
+    return b.bit_length() - 1
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+# ---------------------------------------------------------------------------
+# u32 device-side family — numpy scalar flavour (oracle for the jnp/pallas
+# implementations; wraps modulo 2**32 exactly like the device code).
+# ---------------------------------------------------------------------------
+
+
+def mix32(h: int) -> int:
+    """murmur3 fmix32 finalizer."""
+    h &= MASK32
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & MASK32
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & MASK32
+    h ^= h >> 16
+    return h
+
+
+def hash_iter32(key: int, i: int) -> int:
+    return mix32((key + i * GOLDEN32) & MASK32)
+
+
+def hash_pair32(h: int, f: int) -> int:
+    return mix32((h ^ mix32((f + GOLDEN32) & MASK32)) & MASK32)
+
+
+# ---------------------------------------------------------------------------
+# u32 vectorised numpy flavour (bulk oracle; mirrors jnp code path exactly)
+# ---------------------------------------------------------------------------
+
+
+def np_mix32(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint32)
+    h ^= h >> np.uint32(16)
+    h = h * np.uint32(0x85EBCA6B)
+    h ^= h >> np.uint32(13)
+    h = h * np.uint32(0xC2B2AE35)
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def np_hash_iter32(key: np.ndarray, i: int) -> np.ndarray:
+    return np_mix32(key.astype(np.uint32) + np.uint32((i * GOLDEN32) & MASK32))
+
+
+def np_hash_pair32(h: np.ndarray, f: np.ndarray | int) -> np.ndarray:
+    fm = np_mix32(np.asarray(f, dtype=np.uint32) + np.uint32(GOLDEN32))
+    return np_mix32(h.astype(np.uint32) ^ fm)
+
+
+def np_highest_one_bit_index(b: np.ndarray) -> np.ndarray:
+    """floor(log2 b) for b >= 1, vectorised, exact for all u32.
+
+    Shift-or cascade to smear the top bit downwards, then popcount-1.
+    """
+    b = b.astype(np.uint32)
+    b |= b >> np.uint32(1)
+    b |= b >> np.uint32(2)
+    b |= b >> np.uint32(4)
+    b |= b >> np.uint32(8)
+    b |= b >> np.uint32(16)
+    # popcount via parallel bit summation
+    v = b - ((b >> np.uint32(1)) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> np.uint32(2)) & np.uint32(0x33333333))
+    v = (v + (v >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    v = (v * np.uint32(0x01010101)) >> np.uint32(24)
+    return (v - np.uint32(1)).astype(np.uint32)

@@ -1,0 +1,92 @@
+"""Memento-style wrapper: arbitrary (non-LIFO) node removal on top of any
+LIFO consistent-hash engine.
+
+The BinomialHash paper (§1, §7) notes that all constant-time LIFO algorithms
+"can be extended to handle arbitrary node removals and random failures by
+leveraging the procedure described in MementoHash".  This module implements
+that composition as a *rejection-chaining reconstruction*:
+
+* the base engine addresses the full slot space ``[0, n_total)``;
+* a removed/failed slot ``b`` is recorded in an O(#removed) set;
+* lookups that land on a removed slot are re-hashed (seeded by the slot id,
+  so the chain is deterministic per key) until they hit an alive slot.
+
+Properties (verified by tests):
+* balance      — keys of removed slots scatter uniformly over alive slots;
+* minimal disruption — removing slot b moves only keys chained through b;
+* recovery monotonicity — when b comes back, exactly the keys that chained
+  away from b return to it, nobody else moves.
+
+Memory is O(#removed); expected lookup cost is O(n_total / n_alive) extra
+hashes, i.e. O(1) while failures are a bounded fraction of the fleet.
+"""
+from __future__ import annotations
+
+from repro.core import bits
+
+
+class MementoWrapper:
+    name = "memento"
+    exact = False  # reconstruction of the published description
+
+    def __init__(self, base_factory, n: int, max_chain: int = 4096):
+        """``base_factory(n) -> engine`` builds the underlying LIFO engine."""
+        self._base_factory = base_factory
+        self.base = base_factory(n)
+        self.removed: set[int] = set()
+        self.max_chain = max_chain
+
+    # -- size/state ---------------------------------------------------------
+    @property
+    def n_total(self) -> int:
+        return self.base.size
+
+    @property
+    def size(self) -> int:
+        return self.base.size - len(self.removed)
+
+    def alive(self) -> list[int]:
+        return [b for b in range(self.n_total) if b not in self.removed]
+
+    # -- membership ---------------------------------------------------------
+    def add_bucket(self) -> int:
+        """LIFO append of a brand-new slot (scale-up)."""
+        return self.base.add_bucket()
+
+    def remove_bucket(self, b: int | None = None) -> int:
+        """Remove an arbitrary bucket (failure) or the last one (LIFO)."""
+        if self.size <= 1:
+            raise ValueError("cannot remove the last alive bucket")
+        if b is None or b == self.n_total - 1:
+            # true LIFO removal — shrink the base engine; also garbage-collect
+            # any tombstones that fall off the end.
+            out = self.base.remove_bucket()
+            self.removed.discard(out)
+            while self.n_total - 1 in self.removed and self.n_total > 1:
+                self.removed.discard(self.n_total - 1)
+                self.base.remove_bucket()
+            return out
+        if b in self.removed or not (0 <= b < self.n_total):
+            raise ValueError(f"bucket {b} is not alive")
+        self.removed.add(b)
+        return b
+
+    def restore_bucket(self, b: int) -> None:
+        """A failed node recovered."""
+        if b not in self.removed:
+            raise ValueError(f"bucket {b} is not removed")
+        self.removed.discard(b)
+
+    # -- lookup -------------------------------------------------------------
+    def get_bucket(self, key: int) -> int:
+        b = self.base.get_bucket(key)
+        if b not in self.removed:
+            return b
+        total = self.n_total
+        for i in range(self.max_chain):
+            # deterministic chain seeded by (key, failed slot, attempt)
+            b = bits.hash_pair64(bits.hash_iter64(key, i + 1), b) % total
+            if b not in self.removed:
+                return b
+        # unreachable for any sane failure fraction; fall back to first alive
+        return self.alive()[0]

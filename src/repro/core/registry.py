@@ -1,0 +1,43 @@
+"""Name -> engine registry for the consistent-hash suite."""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.baselines import (
+    AnchorHashLIFO,
+    DxHashLIFO,
+    FlipHashRecon,
+    JumpBackHashRecon,
+    JumpHash,
+    ModuloHash,
+    PowerCHRecon,
+    RendezvousHash,
+    RingHash,
+)
+from repro.core.binomial import BinomialHash, BinomialHash32
+
+ENGINES: dict[str, Callable[[int], object]] = {
+    "binomial": lambda n: BinomialHash(n),
+    "binomial32": lambda n: BinomialHash32(n),
+    "jump": lambda n: JumpHash(n),
+    "fliphash-recon": lambda n: FlipHashRecon(n),
+    "powerch-recon": lambda n: PowerCHRecon(n),
+    "jumpback-recon": lambda n: JumpBackHashRecon(n),
+    "anchor-lifo": lambda n: AnchorHashLIFO(n),
+    "dx-lifo": lambda n: DxHashLIFO(n),
+    "rendezvous": lambda n: RendezvousHash(n),
+    "ring": lambda n: RingHash(n),
+    "modulo": lambda n: ModuloHash(n),
+}
+
+#: constant-time engines compared in the paper's Fig. 5
+CONSTANT_TIME = ["binomial", "jump", "fliphash-recon", "powerch-recon", "jumpback-recon"]
+
+#: engines whose cross-power-of-two monotonicity is guaranteed (see DESIGN §6)
+FULLY_CONSISTENT = ["binomial", "binomial32", "jump", "rendezvous", "ring", "anchor-lifo", "dx-lifo"]
+
+
+def make(name: str, n: int):
+    if name not in ENGINES:
+        raise KeyError(f"unknown engine '{name}'; have {sorted(ENGINES)}")
+    return ENGINES[name](n)

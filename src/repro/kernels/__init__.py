@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot spot: bulk consistent-hash
+lookup (binomial_hash.py) with jit'd dispatcher (ops.py) and pure-jnp oracle
+(ref.py). Validated in interpret mode on CPU; TPU is the target."""
+from repro.kernels.ops import binomial_bulk_lookup  # noqa: F401

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: bulk BinomialHash lookup (keys[N] -> buckets[N]).
+
+TPU adaptation of the paper's scalar hot loop (DESIGN.md §3):
+* u32 integer arithmetic only (murmur3 fmix32 mixers) — the VPU has no
+  integer divide and no 64-bit datapath; the paper's modulo-free power-of-two
+  mask design maps 1:1 onto AND/shift/mul ops;
+* the early-exit rejection loop becomes an ω-unrolled masked blend — on an
+  8×128 lane grid divergent exits buy nothing;
+* keys are laid out (rows, 128) so each block is a native VREG tile; the
+  block row count is the VMEM tiling knob (default 512 rows = 256 KiB per
+  in/out block, comfortably inside the ~16 MiB VMEM budget with double
+  buffering).
+
+The kernel body reuses the exact jnp math from ``repro.core.binomial_jax``,
+so kernel == ref == scalar-u32-oracle is enforced transitively by tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.binomial_jax import _unrolled_body
+
+LANES = 128  # TPU minor-dim tile
+
+
+def _kernel(keys_ref, out_ref, *, n: int, omega: int):
+    keys = keys_ref[...]
+    l = (n - 1).bit_length()
+    E = np.uint32(1 << l)
+    M = np.uint32(1 << (l - 1))
+    out = _unrolled_body(keys.astype(jnp.uint32), E, M, np.uint32(n), omega)
+    out_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "omega", "block_rows", "interpret")
+)
+def binomial_bulk_lookup_2d(
+    keys: jax.Array,
+    n: int,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(rows, 128) uint32 keys -> (rows, 128) int32 buckets. rows % block_rows == 0."""
+    rows, lanes = keys.shape
+    if lanes != LANES:
+        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
+    if rows % block_rows != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
+    if n <= 1:
+        return jnp.zeros(keys.shape, dtype=jnp.int32)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, omega=omega),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(keys.astype(jnp.uint32))
+
+
+def binomial_bulk_lookup_pallas(
+    keys: jax.Array,
+    n: int,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Any-shape int keys -> int32 buckets, padding/reshaping to kernel layout."""
+    flat = keys.reshape(-1).astype(jnp.uint32)
+    total = flat.shape[0]
+    tile = block_rows * LANES
+    padded = (total + tile - 1) // tile * tile
+    if padded != total:
+        flat = jnp.pad(flat, (0, padded - total))
+    out = binomial_bulk_lookup_2d(
+        flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(-1)[:total].reshape(keys.shape)

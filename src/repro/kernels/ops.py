@@ -1,0 +1,35 @@
+"""Jit'd public entry point for bulk consistent-hash lookup.
+
+Dispatches to the Pallas TPU kernel on TPU backends and to the pure-jnp
+reference elsewhere (CPU dry-run / tests), so model code can call one
+function everywhere.  ``interpret=True`` forces the Pallas path in
+interpreter mode (used by kernel tests on CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.binomial_hash import binomial_bulk_lookup_pallas
+from repro.kernels.ref import binomial_bulk_lookup_ref
+
+
+def binomial_bulk_lookup(
+    keys: jax.Array,
+    n: int,
+    omega: int = 16,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_rows: int = 512,
+) -> jax.Array:
+    """keys (any int shape) -> int32 buckets in [0, n).
+
+    use_pallas=None selects the kernel automatically (TPU backend only).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return binomial_bulk_lookup_pallas(
+            keys, n, omega=omega, block_rows=block_rows, interpret=interpret
+        )
+    return binomial_bulk_lookup_ref(keys, n, omega=omega)

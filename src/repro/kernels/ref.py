@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the bulk BinomialHash lookup kernel.
+
+This is the reference the Pallas kernel is tested against (and itself
+bit-exact against the scalar u32 implementation in repro.core.binomial).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binomial_jax import _unrolled_body
+
+
+def binomial_bulk_lookup_ref(keys: jax.Array, n: int, omega: int = 16) -> jax.Array:
+    """keys (any shape, any int dtype) -> int32 buckets in [0, n)."""
+    keys_u32 = keys.astype(jnp.uint32)
+    if n <= 1:
+        return jnp.zeros(keys.shape, dtype=jnp.int32)
+    l = (n - 1).bit_length()
+    E = np.uint32(1 << l)
+    M = np.uint32(1 << (l - 1))
+    return _unrolled_body(keys_u32, E, M, np.uint32(n), omega).astype(jnp.int32)

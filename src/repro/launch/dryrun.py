@@ -1,0 +1,210 @@
+import os
+DUMP_DIR = os.environ.get("REPRO_DUMP_DIR", "/tmp/repro_xla_dump")
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    f"--xla_dump_to={DUMP_DIR} --xla_dump_hlo_pass_re=spmd-partitioning "
+    "--xla_dump_large_constants=false"
+)
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-touching import)
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, print memory/cost analysis, and emit the roofline table inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+import argparse
+import glob
+import json
+import shutil
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.roofline.analysis import analyze, memory_summary
+from repro.sharding import rules
+from repro.training.optimizer import make_optimizer, zero1_pspecs
+from repro.training.train_step import TrainHparams, make_train_state, make_train_step
+
+ADAFACTOR_THRESHOLD = 1e11  # params above this use factored optimizer state
+
+
+def model_flops_total(cfg, shape, n_active: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # serving decode uses the per-expert TP weight layout (EP is useless at
+    # 1-token-per-expert capacities — §Perf cell 2); train/prefill keep EP
+    # (storing F-sharded for train was tried and REFUTED — §Perf cell 3)
+    elayout = "tp" if (shape.kind == "decode" and cfg.moe is not None) else "ep"
+    with rules.mesh_context(mesh, fsdp=cfg.fsdp, expert_layout=elayout):
+        params_struct = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        pspecs = rules.params_pspecs(params_struct)
+        psh = _shardings(mesh, pspecs)
+        n_params = M.count_params(params_struct)
+        n_active = M.active_params(cfg, params_struct)
+        batch_struct = M.input_specs(cfg, shape)
+        bsh = _shardings(mesh, rules.batch_pspecs(batch_struct))
+
+        if shape.kind == "train":
+            opt_name = "adafactor" if n_params > ADAFACTOR_THRESHOLD else "adamw"
+            opt = make_optimizer(opt_name)
+            hp = TrainHparams()
+            state_struct = jax.eval_shape(
+                lambda: make_train_state(M.init_params(jax.random.PRNGKey(0), cfg), opt, hp)
+            )
+            opt_specs = zero1_pspecs(params_struct, pspecs, state_struct["opt"])
+            state_specs = {"params": pspecs, "opt": opt_specs, "step": P()}
+            state_sh = _shardings(mesh, state_specs)
+            step_fn = make_train_step(cfg, opt, hp)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, bsh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_struct, batch_struct)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return M.prefill(params, batch, cfg, shape.seq_len)
+
+            out_struct = jax.eval_shape(prefill_fn, params_struct, batch_struct)
+            cache_sh = _shardings(mesh, rules.cache_pspecs(out_struct[0]))
+            logits_sh = NamedSharding(mesh, rules.fitted(out_struct[1].shape, "dp", "tp"))
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(psh, bsh),
+                out_shardings=(cache_sh, logits_sh),
+            ).lower(params_struct, batch_struct)
+        else:  # decode
+            cache_struct = jax.eval_shape(
+                lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            cache_sh = _shardings(mesh, rules.cache_pspecs(cache_struct))
+
+            def decode_fn(params, cache, batch):
+                return M.decode_step(params, cache, batch, cfg)
+
+            out_struct = jax.eval_shape(decode_fn, params_struct, cache_struct, batch_struct)
+            logits_sh = NamedSharding(mesh, rules.fitted(out_struct[1].shape, "dp", "tp"))
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(psh, cache_sh, bsh),
+                out_shardings=(cache_sh, logits_sh),
+                donate_argnums=(1,),
+            ).lower(params_struct, cache_struct, batch_struct)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        before = set(glob.glob(os.path.join(DUMP_DIR, "*after_spmd-partitioning*.txt")))
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        new = sorted(
+            set(glob.glob(os.path.join(DUMP_DIR, "*after_spmd-partitioning*.txt"))) - before,
+            key=os.path.getmtime,
+        )
+        hlo_text = open(new[-1]).read() if new else None
+        mem = memory_summary(compiled)
+        roof = analyze(
+            compiled, mesh.size, model_flops_total(cfg, shape, n_active),
+            hlo_text=hlo_text, pod_group_size=2 if multi_pod else 1,
+        )
+        result = {
+            "status": "ok",
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": mesh.size,
+            "n_params": n_params,
+            "n_active": n_active,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": mem,
+            "roofline": roof.row(),
+        }
+        if verbose:
+            per_dev = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+            print(
+                f"  [ok] {arch} × {shape_name} × {result['mesh']}: "
+                f"params={n_params/1e9:.1f}B args+temp={per_dev:.2f}GiB/dev "
+                f"flops/dev={roof.flops:.3e} coll={roof.coll_bytes/2**20:.1f}MiB/dev "
+                f"dominant={roof.dominant} (lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+            )
+        return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/out/dryrun.json")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    shutil.rmtree(DUMP_DIR, ignore_errors=True)
+    os.makedirs(DUMP_DIR, exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                if results.get(key, {}).get("status") == "ok":
+                    n_ok += 1
+                    continue  # incremental re-runs
+                print(f"[dryrun] {key}")
+                try:
+                    r = lower_cell(arch, shape, multi)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    r = {"status": "failed", "error": f"{type(e).__name__}: {e}"}
+                results[key] = r
+                if r["status"] == "ok":
+                    n_ok += 1
+                elif r["status"] == "skipped":
+                    n_skip += 1
+                    print(f"  [skip] {r['reason']}")
+                else:
+                    n_fail += 1
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} FAILED={n_fail} -> {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""Decoder block assembly + scanned stacks.
+
+Block kinds:
+    attn      — pre-norm attention (GQA or MLA) + pre-norm MLP
+    attn_moe  — pre-norm attention + pre-norm MoE
+    rec       — pre-norm RG-LRU mixer + pre-norm MLP (Griffin)
+    ssd       — pre-norm Mamba-2 SSD mixer (no MLP)
+
+A model is a list of *segments*; each segment is a repeating unit of block
+kinds scanned ``count`` times with stacked params (keeps HLO size and compile
+time bounded at 512 devices — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import mla as mla_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import rglru as rglru_mod
+from repro.models.layers import ssd as ssd_mod
+from repro.models.layers.common import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+@dataclass(frozen=True)
+class Segment:
+    unit: tuple[str, ...]  # block kinds in one scan step
+    count: int  # scan length
+    base: int  # absolute index of the first layer in this segment
+
+
+def build_segments(cfg: ArchConfig) -> list[Segment]:
+    kinds = cfg.layer_kinds()
+    segs: list[Segment] = []
+    if len(cfg.pattern) > 1:
+        unit_len = len(cfg.pattern)
+        n_super = len(kinds) // unit_len
+        if n_super > 0:
+            segs.append(Segment(tuple(kinds[:unit_len]), n_super, 0))
+        rest = kinds[n_super * unit_len :]
+        base = n_super * unit_len
+        i = 0
+        while i < len(rest):
+            j = i
+            while j < len(rest) and rest[j] == rest[i]:
+                j += 1
+            segs.append(Segment((rest[i],), j - i, base + i))
+            i = j
+        return segs
+    # single-kind pattern: group consecutive identical kinds (moe start split)
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(Segment((kinds[i],), j - i, i))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# single-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg, cfg.d_model)}
+    if kind in ("attn", "attn_moe"):
+        if cfg.attention == "mla":
+            p["mixer"] = mla_mod.init_mla(ks[0], cfg)
+        else:
+            p["mixer"] = attn_mod.init_attention(ks[0], cfg)
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        if kind == "attn_moe":
+            p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "rec":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssd_mod.init_ssd(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_train(p, kind, x, positions, token_ids, salt, cfg: ArchConfig):
+    """-> (x, aux_loss)"""
+    aux = jnp.float32(0.0)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "attn_moe"):
+        if cfg.attention == "mla":
+            mix = mla_mod.mla_train(p["mixer"], h, positions, cfg)
+        else:
+            mix = attn_mod.attention_train(p["mixer"], h, positions, cfg)
+        x = x + mix
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if kind == "attn_moe":
+            y, aux = moe_mod.apply_moe(p["moe"], h2, token_ids, salt, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    elif kind == "rec":
+        mix, _ = rglru_mod.rglru_scan(p["mixer"], h, cfg)
+        x = x + mix
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    elif kind == "ssd":
+        mix, _ = ssd_mod.ssd_scan(p["mixer"], h, cfg)
+        x = x + mix
+    return x, aux
+
+
+def block_prefill(p, kind, x, positions, token_ids, salt, cfg: ArchConfig, cache_len: int):
+    """-> (x, cache, aux)"""
+    aux = jnp.float32(0.0)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "attn_moe"):
+        if cfg.attention == "mla":
+            mix, cache = mla_mod.mla_prefill(p["mixer"], h, positions, cfg, cache_len)
+        else:
+            mix, cache = attn_mod.attention_prefill(p["mixer"], h, positions, cfg, cache_len)
+        x = x + mix
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if kind == "attn_moe":
+            y, aux = moe_mod.apply_moe(p["moe"], h2, token_ids, salt, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    elif kind == "rec":
+        mix, cache = rglru_mod.rglru_scan(p["mixer"], h, cfg)
+        x = x + mix
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    elif kind == "ssd":
+        mix, cache = ssd_mod.ssd_scan(p["mixer"], h, cfg)
+        x = x + mix
+    return x, cache, aux
+
+
+def block_decode(p, kind, x, pos, cache, token_ids, salt, cfg: ArchConfig):
+    """x (B,1,D) -> (x, new_cache)"""
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "attn_moe"):
+        if cfg.attention == "mla":
+            mix, cache = mla_mod.mla_decode(p["mixer"], h, pos, cache, cfg)
+        else:
+            mix, cache = attn_mod.attention_decode(p["mixer"], h, pos, cache, cfg)
+        x = x + mix
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if kind == "attn_moe":
+            y, _ = moe_mod.apply_moe(p["moe"], h2, token_ids, salt, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    elif kind == "rec":
+        mix, cache = rglru_mod.rglru_decode(p["mixer"], h, cache, cfg)
+        x = x + mix
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    elif kind == "ssd":
+        mix, cache = ssd_mod.ssd_decode(p["mixer"], h, cache, cfg)
+        x = x + mix
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# empty cache construction (decode entry from scratch / specs)
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(kind: str, cfg: ArchConfig, batch: int, cache_len: int):
+    """Zero/empty cache pytree for one block (no leading layer dim)."""
+    dt = jnp.dtype(cfg.dtype)
+    if kind in ("attn", "attn_moe"):
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return {
+                "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dt),
+                "kr": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dt),
+                "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+            }
+        G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, cache_len, G, hd), dt),
+            "v": jnp.zeros((batch, cache_len, G, hd), dt),
+            "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+    if kind == "rec":
+        W = cfg.rglru.lru_width or cfg.d_model
+        cw = cfg.rglru.conv_width
+        return {
+            "h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, W), dt),
+        }
+    if kind == "ssd":
+        d_inner, H, G, N, hd = ssd_mod.dims(cfg)
+        conv_dim = d_inner + 2 * G * N
+        return {
+            "state": jnp.zeros((batch, H, hd, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_dim), dt),
+        }
+    raise ValueError(kind)
+
+
+def block_cache_len(kind: str, cfg: ArchConfig, max_len: int) -> int:
+    if kind in ("attn", "attn_moe") and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len

@@ -1,0 +1,320 @@
+"""GQA attention: chunked (flash-style) training/prefill path + cached decode.
+
+Memory discipline: scores are never materialised at (S, S) — the kernel-free
+JAX implementation scans KV chunks with an online softmax (running max/sum),
+so peak score memory is (B, G, R, q_chunk, kv_chunk) fp32.  Sliding-window
+archs use a banded variant that only touches the statically-known band of KV
+chunks (no wasted FLOPs outside the window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.common import (
+    apply_rope,
+    dense_init,
+    mrope_cos_sin,
+    rms_head_norm,
+    rope_cos_sin,
+    zeros,
+)
+from repro.sharding.rules import shard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig):
+    """Weights stored FUSED — (D, H*hd) etc. — so the sharded dim is always
+    divisible by the 16-way model axis even when H or KVH is not (e.g. 56
+    heads, 8 KV heads); activations are reshaped to per-head form in-graph."""
+    D, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dt),
+        "wk": dense_init(ks[1], (D, KVH * hd), dt),
+        "wv": dense_init(ks[2], (D, KVH * hd), dt),
+        "wo_attn": dense_init(ks[3], (H * hd, D), dt, scale=0.02 / np.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H * hd,), dt)
+        p["bk"] = zeros((KVH * hd,), dt)
+        p["bv"] = zeros((KVH * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _cos_sin(cfg: ArchConfig, positions, hd: int):
+    if cfg.pos_emb == "mrope":
+        return mrope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    if cfg.pos_emb == "rope":
+        return rope_cos_sin(positions, int(hd * cfg.rope_fraction) // 2 * 2, cfg.rope_theta)
+    return None, None
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    """x (B,S,D) -> q (B,S,G,R,hd), k/v (B,S,G,hd) with rope applied."""
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    R = H // KVH
+    B, S = x.shape[:2]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    # constrain the fused forms (always 16-divisible), then split heads
+    q = shard(q, "dp", None, "tp").reshape(B, S, H, hd)
+    k = shard(k, "dp", None, "tp").reshape(B, S, KVH, hd)
+    v = shard(v, "dp", None, "tp").reshape(B, S, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.pos_emb in ("rope", "mrope"):
+        cos, sin = _cos_sin(cfg, positions, hd)
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    q = q.reshape(B, S, KVH, R, hd)
+    return q, k, v
+
+
+def _online_step(q_i, k_j, v_j, mask, carry, scale):
+    """One online-softmax step in XLA-natural dot order (B,G,Cq,R,Ck)."""
+    m, l, acc = carry
+    s = jnp.einsum(
+        "bqgrd,bkgd->bgqrk", q_i, k_j, preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bgqrk,bkgd->bgqrd", p.astype(v_j.dtype), v_j)
+    acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def attention_sharding_mode(G: int, R: int, S: int, windowed: bool) -> str:
+    """Pick how attention internals shard over the model axis (see §Perf):
+
+    head  — KV heads divide tp: q/k/v/scores head-sharded, ZERO attn comm;
+    rhead — query-rep heads divide tp: k/v replicated (one gather), q sharded
+            on the R dim, scores local;
+    seq   — neither divides: q resident-sharded on sequence, k/v replicated
+            (one gather per layer) — context parallelism;
+    local — no constraints (tiny meshes / no mesh).
+    """
+    from repro.sharding.rules import current_mesh
+
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if tp <= 1:
+        return "local"
+    if G % tp == 0:
+        return "head"
+    if R % tp == 0:
+        return "rhead"
+    if S % tp == 0 and not windowed:
+        return "seq"
+    return "local"
+
+
+def _constrain(q, k, v, qp, mode):
+    if mode == "head":
+        q = shard(q, "dp", None, "tp", None, None)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+    elif mode == "rhead":
+        q = shard(q, "dp", None, None, "tp", None)
+        k = shard(k, "dp", None, None, None)  # replicated (gathered once)
+        v = shard(v, "dp", None, None, None)
+    elif mode == "seq":
+        q = shard(q, "dp", "tp", None, None, None)
+        qp = shard(qp, "dp", "tp")
+        k = shard(k, "dp", None, None, None)
+        v = shard(v, "dp", None, None, None)
+    return q, k, v, qp
+
+
+def chunked_causal_attention(
+    q, k, v, q_positions, kv_positions, *, window=None, q_chunk=512, kv_chunk=512
+):
+    """Flash-style chunked causal attention (optionally sliding-window).
+
+    q (B,S,G,R,hd); k/v (B,T,G,hd); positions (B,S)/(B,T) absolute.
+
+    Full-causal: q stays RESIDENT (head-, rhead- or sequence-sharded per
+    ``attention_sharding_mode``) and a single scan runs over KV chunks with
+    an online softmax — no per-chunk resharding, so the only collective is
+    the (at most) one KV gather implied by the chosen mode.
+
+    Windowed: double scan (query chunks × the static band of KV chunks), so
+    out-of-window work is never computed.
+    """
+    B, S, G, R, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    nq, nk = S // q_chunk, T // kv_chunk
+    mode = attention_sharding_mode(G, R, S, window is not None)
+
+    if window is None:
+        q, k, v, q_positions = _constrain(q, k, v, q_positions, mode)
+        kc = k.reshape(B, nk, kv_chunk, G, hd)
+        vc = v.reshape(B, nk, kv_chunk, G, hd)
+        kp = kv_positions.reshape(B, nk, kv_chunk)
+
+        def kv_body(carry, xs_kv):
+            m, l, acc = carry
+            k_j, v_j, kp_j = xs_kv
+            mask = (kp_j[:, None, :] <= q_positions[:, :, None])[:, None, :, None, :]
+            # q (B,S,G,R,hd) resident; scores in XLA-natural dot order
+            # (batch dims b,g; lhs free s,r; rhs free k) -> no transpose inserted
+            s = jnp.einsum(
+                "bsgrd,bkgd->bgsrk", q, k_j, preferred_element_type=jnp.float32
+            ) * scale
+            s = jnp.where(mask, s, NEG_INF)  # (B,G,S,R,Ck)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # p in bf16 for the PV matmul (flash-kernel practice): the max is
+            # already subtracted so p in [0,1] — bf16 relative error ~1e-2 on a
+            # sum of 512 terms, well inside attention tolerance
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgsrk,bkgd->bgsrd", p.astype(v_j.dtype), v_j)
+            acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, S, R), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, S, R), jnp.float32)
+        a0 = jnp.zeros((B, G, S, R, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body,
+            (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kp, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,G,S,R,hd)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,S,G,R,hd)
+
+    # ---- windowed: banded double scan --------------------------------------
+    q, k, v, q_positions = _constrain(q, k, v, q_positions, mode if mode != "seq" else "local")
+    qc = q.reshape(B, nq, q_chunk, G, R, hd)
+    qp = q_positions.reshape(B, nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, G, hd)
+    vc = v.reshape(B, nk, kv_chunk, G, hd)
+    kp = kv_positions.reshape(B, nk, kv_chunk)
+    nband = min(nk, (window + q_chunk - 1) // kv_chunk + 2)
+
+    def q_body(_, xs):
+        q_i, qp_i, qi_idx = xs  # q_i (B,Cq,G,R,hd)
+        if mode == "head":
+            q_i = shard(q_i, "dp", None, "tp", None, None)
+        elif mode == "rhead":
+            q_i = shard(q_i, "dp", None, None, "tp", None)
+        m0 = jnp.full((B, G, q_chunk, R), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, q_chunk, R), jnp.float32)
+        a0 = jnp.zeros((B, G, q_chunk, R, hd), jnp.float32)
+        start = jnp.clip(qi_idx - (nband - 1), 0, nk - nband)
+
+        def kv_body(carry, off):
+            j = start + off
+            k_j = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+            kp_j = jax.lax.dynamic_index_in_dim(kp, j, axis=1, keepdims=False)
+            if mode == "head":
+                k_j = shard(k_j, "dp", None, "tp", None)
+                v_j = shard(v_j, "dp", None, "tp", None)
+            elif mode == "rhead":
+                k_j = shard(k_j, "dp", None, None, None)
+                v_j = shard(v_j, "dp", None, None, None)
+            mask = (kp_j[:, None, :] <= qp_i[:, :, None]) & (
+                kp_j[:, None, :] > qp_i[:, :, None] - window
+            )
+            mask = mask[:, None, :, None, :]  # (B,1,Cq,1,Ck)
+            return _online_step(q_i, k_j, v_j, mask, carry, scale), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nband))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,G,Cq,R,hd)
+        return None, jnp.moveaxis(out, 1, 2)  # (B,Cq,G,R,hd)
+
+    _, outs = jax.lax.scan(
+        q_body,
+        None,
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0), jnp.arange(nq)),
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, G, R, hd)
+    return out.astype(q.dtype)
+
+
+def attention_train(p, x, positions, cfg: ArchConfig):
+    """Full forward (train / prefill trunk): x (B,S,D) -> (B,S,D)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qpos = positions[-1] if cfg.pos_emb == "mrope" else positions  # temporal stream
+    out = chunked_causal_attention(q, k, v, qpos, qpos, window=cfg.window)
+    B, S = x.shape[:2]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    out = shard(out.reshape(B, S, H * hd), "dp", None, "tp")
+    return jnp.einsum("bse,ed->bsd", out, p["wo_attn"])
+
+
+def attention_prefill(p, x, positions, cfg: ArchConfig, cache_len: int):
+    """Prefill: returns (out, (k_cache, v_cache, cache_positions)) padded to cache_len."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qpos = positions[-1] if cfg.pos_emb == "mrope" else positions
+    out = chunked_causal_attention(q, k, v, qpos, qpos, window=cfg.window)
+    B, S = x.shape[:2]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    out = shard(out.reshape(B, S, H * hd), "dp", None, "tp")
+    out = jnp.einsum("bse,ed->bsd", out, p["wo_attn"])
+    if cfg.window is not None and cache_len == cfg.window and S >= cache_len:
+        # ring-buffer cache: slot = pos % window must hold position pos
+        k_keep, v_keep, p_keep = (t[:, -cache_len:] for t in (k, v, qpos))
+        roll = S % cache_len
+        k_c = jnp.roll(k_keep, roll, axis=1)
+        v_c = jnp.roll(v_keep, roll, axis=1)
+        p_c = jnp.roll(p_keep, roll, axis=1)
+    else:
+        pad = cache_len - S
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        p_c = jnp.pad(qpos, ((0, 0), (0, pad)), constant_values=-1)
+    return out, {"k": k_c, "v": v_c, "pos": p_c}
+
+
+def attention_decode(p, x, pos, cache, cfg: ArchConfig):
+    """One-token decode. x (B,1,D); pos scalar int32; cache dict of
+    k/v (B,T,G,hd) and pos (B,T). Returns (out, new_cache)."""
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.pos_emb == "mrope":
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    slot = pos % T  # ring buffer for windowed caches; plain index otherwise
+    k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    p_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1
+    )
+    scale = 1.0 / np.sqrt(cfg.resolved_head_dim)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q, k_c, preferred_element_type=jnp.float32) * scale
+    valid = (p_c >= 0) & (p_c <= pos)
+    if cfg.window is not None:
+        valid = valid & (p_c > pos - cfg.window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v_c.dtype), v_c)
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    out = out.reshape(B, 1, H * hd)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo_attn"])
+    return out, {"k": k_c, "v": v_c, "pos": p_c}

@@ -1,0 +1,179 @@
+"""Shared layer primitives: norms, MLPs, positional embeddings, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import shard
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, dim: int):
+    p = {"scale": ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm" and cfg.norm_bias:
+        p["bias"] = zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ArchConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+        if "bias" in p:
+            out = out + p["bias"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head RMS norm (qk-norm); scale has shape (head_dim,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs — swiglu | geglu | gelu
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, d_model: int | None = None, d_ff: int | None = None):
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, (D, F), dt), "wo_mlp": dense_init(k3, (F, D), dt)}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["wg"] = dense_init(k2, (D, F), dt)
+    if cfg.mlp_bias:
+        p["bi"] = zeros((F,), dt)
+        p["bo"] = zeros((D,), dt)
+    return p
+
+
+def apply_mlp(p, x, cfg: ArchConfig):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("...d,df->...f", x, p["wg"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("...d,df->...f", x, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "dp", None, "tp")
+    out = jnp.einsum("...f,fd->...d", h, p["wo_mlp"])
+    if cfg.mlp_bias:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE / sinusoidal
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+
+
+def rope_cos_sin(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim/2) in fp32."""
+    freqs = jnp.asarray(_rope_freqs(dim, theta))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction: float = 1.0):
+    """x (..., S, H, hd); cos/sin (..., S, d2). Rotates the first
+    ``fraction`` of the head dim (pairwise split-half convention)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    d2 = rot // 2
+    x1, x2 = xr[..., :d2], xr[..., d2:]
+    c = cos[..., :d2][..., :, None, :]  # broadcast over heads
+    s = sin[..., :d2][..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * c - xf2 * s
+    o2 = xf2 * c + xf1 * s
+    out = jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def mrope_cos_sin(positions3, dim: int, theta: float, sections: tuple[int, ...]):
+    """M-RoPE (Qwen2-VL): positions3 (3, ..., S); sections sum to dim/2.
+
+    Returns cos/sin (..., S, dim/2) assembled per-section from the three
+    (temporal, height, width) position streams.
+    """
+    freqs = jnp.asarray(_rope_freqs(dim, theta))  # (dim/2,)
+    ang = positions3[..., None].astype(jnp.float32) * freqs  # (3, ..., S, dim/2)
+    pieces, off = [], 0
+    for stream, sec in enumerate(sections):
+        pieces.append(ang[stream, ..., off : off + sec])
+        off += sec
+    ang_sel = jnp.concatenate(pieces, axis=-1)  # (..., S, dim/2)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+def sinusoidal_pos_emb(positions, dim: int):
+    """Classic transformer sinusoid table evaluated at ``positions``."""
+    half = dim // 2
+    freqs = jnp.asarray(1.0 / (10000.0 ** (np.arange(half, dtype=np.float32) / half)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg: ArchConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.padded_vocab, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.padded_vocab), dt, scale=0.02)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ArchConfig):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.dtype)
+    return shard(x, "dp", None, None)
+
+
+def unembed(p, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"])
+    return shard(logits.astype(jnp.float32), "dp", None, "tp")

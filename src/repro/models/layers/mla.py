@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Cache stores only the compressed latent c_kv (r_kv per token) plus the shared
+rope key (hd_r per token) — the memory advantage that defines MLA.  Decode
+uses the weight-absorption trick (fold W_uk into the query, attend directly
+against the latent, fold W_uv into the output) so the per-step FLOPs scale
+with r_kv, not H*hd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import chunked_causal_attention
+from repro.models.layers.common import apply_rope, dense_init, rope_cos_sin
+from repro.sharding.rules import shard
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg: ArchConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    wo_scale = 0.02 / np.sqrt(2 * cfg.num_layers)
+    return {
+        "w_dq": dense_init(ks[0], (D, m.q_lora_rank), dt),
+        "q_norm_scale": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H, m.qk_nope_head_dim), dt),
+        "w_qr": dense_init(ks[2], (m.q_lora_rank, H, m.qk_rope_head_dim), dt),
+        "w_dkv": dense_init(ks[3], (D, m.kv_lora_rank), dt),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_kr": dense_init(ks[4], (D, m.qk_rope_head_dim), dt),
+        "w_uk": dense_init(ks[5], (m.kv_lora_rank, H, m.qk_nope_head_dim), dt),
+        "w_uv": dense_init(ks[6], (m.kv_lora_rank, H, m.v_head_dim), dt),
+        "wo_attn": dense_init(ks[7], (H, m.v_head_dim, D), dt, scale=wo_scale),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _latents(p, x, cfg: ArchConfig, positions):
+    """x (B,S,D) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr), c_kv (B,S,r), k_rope (B,S,dr)."""
+    m = cfg.mla
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm_scale"])
+    q_nope = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_rope = jnp.einsum("bsr,rhk->bshk", cq, p["w_qr"])
+    c_kv = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm_scale"])
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"])
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(p, x, positions, cfg: ArchConfig):
+    """Expanded (non-absorbed) path for train/prefill trunks."""
+    m = cfg.mla
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    B, S = x.shape[:2]
+    # fold rope/nope into one head dim; pad v to the same width for the
+    # shared chunked kernel, then slice back
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], q_rope.shape)], -1)
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = shard(q.reshape(B, S, H, 1, dq), "dp", None, "tp", None, None)
+    k = shard(k, "dp", None, "tp", None)
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - m.v_head_dim)))
+    out = chunked_causal_attention(q, k, vpad, positions, positions, window=cfg.window)
+    out = out.reshape(B, S, H, dq)[..., : m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo_attn"])
+
+
+def mla_prefill(p, x, positions, cfg: ArchConfig, cache_len: int):
+    out = mla_train(p, x, positions, cfg)
+    _, _, c_kv, k_rope = _latents(p, x, cfg, positions)
+    B, S = x.shape[:2]
+    pad = cache_len - S
+    cache = {
+        "ckv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "kr": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+        "pos": jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1),
+    }
+    return out, cache
+
+
+def mla_decode(p, x, pos, cache, cfg: ArchConfig):
+    """Absorbed decode: attend directly against the latent cache."""
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latents(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+    pc = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, pos, axis=1
+    )
+    # absorb W_uk: q_abs (B,1,H,r) = q_nope @ W_uk^T
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (
+        jnp.einsum("bshr,btr->bhst", q_abs, ckv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bshk,btk->bhst", q_rope, kr, preferred_element_type=jnp.float32)
+    ) * scale
+    valid = (pc >= 0) & (pc <= pos)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # attend against the latent, then absorb W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", w.astype(ckv.dtype), ckv)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo_attn"])
+    return out, {"ckv": ckv, "kr": kr, "pos": pc}

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (per Griffin):
+    x -> in_proj_y (D -> W) -> conv1d(width 4) -> RG-LRU -> *
+    x -> in_proj_gate (D -> W) -> GeLU          ----------/
+    * -> out_proj (W -> D)
+
+RG-LRU recurrence (elementwise over the W channels):
+    r_t = sigmoid(x_t @ gate_a + b_a)        recurrence gate
+    i_t = sigmoid(x_t @ gate_x + b_x)        input gate
+    a_t = exp(c * r_t * log(sigmoid(Λ)))     = a^(c·r_t), a = sigmoid(Λ)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t²) * (i_t * x_t)
+
+Prefill uses an associative scan over (a_t, b_t) pairs; decode is a single
+fused step with O(1) state: (h, conv buffer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.common import dense_init, zeros
+from repro.sharding.rules import shard
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig):
+    D, W = cfg.d_model, _width(cfg)
+    cw = cfg.rglru.conv_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ) ∈ [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / cfg.rglru.c) / (1 - u ** (1.0 / cfg.rglru.c)))
+    return {
+        "in_proj_y": dense_init(ks[1], (D, W), dt),
+        "in_proj_gate": dense_init(ks[2], (D, W), dt),
+        "conv_w": dense_init(ks[3], (cw, W), dt, scale=1.0 / np.sqrt(cw)),
+        "conv_b": zeros((W,), dt),
+        "gate_a": dense_init(ks[4], (W, W), dt),
+        "b_a": zeros((W,), jnp.float32),
+        "gate_x": dense_init(ks[5], (W, W), dt),
+        "b_x": zeros((W,), jnp.float32),
+        "lam": lam,
+        "out_proj": dense_init(
+            jax.random.fold_in(key, 7), (W, D), dt, scale=0.02 / np.sqrt(2 * cfg.num_layers)
+        ),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x (B,S,W); w (cw,W) depthwise causal conv.  state (B,cw-1,W) or None."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+cw-1, W)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _gates(p, y, cfg: ArchConfig):
+    """y (..., W) -> (a_t, beta_t·x gate) in fp32."""
+    yf = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(yf @ p["gate_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(yf @ p["gate_x"].astype(jnp.float32) + p["b_x"])
+    log_a = cfg.rglru.c * r * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * yf
+
+
+def rglru_scan(p, x, cfg: ArchConfig, h0=None, conv_state=None):
+    """Full-sequence pass. x (B,S,D) -> (out (B,S,D), (h_last, conv_state))."""
+    y = jnp.einsum("bsd,dw->bsw", x, p["in_proj_y"])
+    y = shard(y, "dp", None, "tp")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_proj_gate"]))
+    y, conv_state = _causal_conv(y, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _gates(p, y, cfg)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h_last = h[:, -1]
+    out = (h.astype(x.dtype) * gate)
+    out = shard(out, "dp", None, "tp")
+    out = jnp.einsum("bsw,wd->bsd", out, p["out_proj"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_decode(p, x, cache, cfg: ArchConfig):
+    """One-step decode. x (B,1,D); cache {h (B,W) f32, conv (B,cw-1,W)}."""
+    y = jnp.einsum("bsd,dw->bsw", x, p["in_proj_y"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_proj_gate"]))
+    y, conv_state = _causal_conv(y, p["conv_w"], p["conv_b"], cache["conv"])
+    a, b = _gates(p, y, cfg)  # (B,1,W)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}

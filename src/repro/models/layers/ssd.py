@@ -1,0 +1,193 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+Per Dao & Gu (2024): the sequence is split into chunks of Q tokens; within a
+chunk the SSM is computed in its quadratic "attention-like" dual form (MXU
+friendly), and a cheap sequential scan propagates the (H, hd, N) states
+between chunks.  Decode keeps O(1) state: the SSM state + conv buffer.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads,
+B/C projections have n_groups groups (broadcast over H/G heads each).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.common import dense_init, zeros
+from repro.sharding.rules import shard
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.n_groups, s.d_state, s.head_dim
+
+
+def init_ssd(key, cfg: ArchConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, G, N, hd = dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (H,), jnp.float32) * (np.log(0.1) - np.log(1e-3))
+        + np.log(1e-3)
+    )
+    return {
+        "in_proj_z": dense_init(ks[1], (D, d_inner), dt),
+        "in_proj_x": dense_init(ks[2], (D, d_inner), dt),
+        "in_proj_bc": dense_init(ks[3], (D, 2 * G * N), dt),
+        "in_proj_dt": dense_init(ks[4], (D, H), dt),
+        "conv_w": dense_init(ks[5], (s.conv_width, conv_dim), dt, scale=1.0 / np.sqrt(s.conv_width)),
+        "conv_b": zeros((conv_dim,), dt),
+        "A_log": jnp.log(jax.random.uniform(ks[6], (H,), jnp.float32, 1.0, 16.0)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(
+            ks[7], (d_inner, D), dt, scale=0.02 / np.sqrt(2 * cfg.num_layers)
+        ),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _project(p, x, cfg: ArchConfig, conv_state=None):
+    """x (B,S,D) -> z, xs (B,S,H,hd), Bm/Cm (B,S,G,N), dt (B,S,H) + conv state."""
+    d_inner, H, G, N, hd = dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x, p["in_proj_z"])
+    xi = jnp.einsum("bsd,di->bsi", x, p["in_proj_x"])
+    bc = jnp.einsum("bsd,di->bsi", x, p["in_proj_bc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_proj_dt"])
+    xbc = jnp.concatenate([xi, bc], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + G * N]
+    Cm = xbc[..., d_inner + G * N :]
+    B_, S = x.shape[:2]
+    xs = shard(xs.reshape(B_, S, H, hd), "dp", None, "tp", None)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    return z, xs, Bm, Cm, dtv, conv_state
+
+
+def _finish(p, y, z, x_dtype, cfg: ArchConfig):
+    """Gated RMSNorm + out-proj. y (B,S,H,hd) f32; z (B,S,d_inner)."""
+    d_inner = z.shape[-1]
+    B, S = y.shape[:2]
+    yf = y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = jnp.einsum("bsi,id->bsd", yf.astype(x_dtype), p["out_proj"])
+    return out
+
+
+def ssd_scan(p, x, cfg: ArchConfig, state=None, conv_state=None):
+    """Full-sequence chunked SSD. x (B,S,D) -> (out, {state, conv})."""
+    d_inner, H, G, N, hd = dims(cfg)
+    Q = min(cfg.ssm.chunk, x.shape[1])
+    B_, S, D = x.shape
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    Hg = H // G
+
+    z, xs, Bm, Cm, dtv, conv_state = _project(p, x, cfg, conv_state)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dtv * A  # (B,S,H)
+
+    # chunk everything: (B, nc, Q, ...)
+    xs_c = xs.reshape(B_, nc, Q, G, Hg, hd)
+    B_c = Bm.reshape(B_, nc, Q, G, N)
+    C_c = Cm.reshape(B_, nc, Q, G, N)
+    dt_c = dtv.reshape(B_, nc, Q, G, Hg)
+    dA_c = dA.reshape(B_, nc, Q, G, Hg)
+    cum = jnp.cumsum(dA_c, axis=2)  # (B,nc,Q,G,Hg)
+
+    # ---- intra-chunk (quadratic dual form) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None] - cum[:, :, None, :]  # (B,nc,Qi,Qj,G,Hg)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None, None]
+    L = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcign,bcjgn->bcijg", C_c, B_c, preferred_element_type=jnp.float32)
+    w = cb[..., None] * L * dt_c[:, :, None, :, :, :]  # (B,nc,Qi,Qj,G,Hg)
+    y_intra = jnp.einsum("bcijgh,bcjghp->bcighp", w.astype(xs_c.dtype), xs_c)
+
+    # ---- chunk-local states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :, :] - cum)  # (B,nc,Q,G,Hg)
+    sl = jnp.einsum(
+        "bcqgn,bcqgh,bcqghp->bcghpn",
+        B_c,
+        (decay_to_end * dt_c).astype(B_c.dtype),
+        xs_c,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,G,Hg,hd,N)
+    chunk_decay = jnp.exp(cum[:, :, -1])  # (B,nc,G,Hg)
+
+    # ---- inter-chunk state scan ----
+    if state is None:
+        state0 = jnp.zeros((B_, G, Hg, hd, N), jnp.float32)
+    else:
+        state0 = state.astype(jnp.float32)
+
+    def step(s_prev, ins):
+        sl_k, dk = ins  # (B,G,Hg,hd,N), (B,G,Hg)
+        s_new = sl_k + dk[..., None, None] * s_prev
+        return s_new, s_prev
+
+    s_last, s_prevs = jax.lax.scan(
+        step, state0, (jnp.moveaxis(sl, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B,nc,G,Hg,hd,N)
+
+    y_inter = jnp.einsum(
+        "bcqgn,bcqgh,bcghpn->bcqghp",
+        C_c,
+        jnp.exp(cum).astype(C_c.dtype),
+        s_prevs.astype(C_c.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(B_, S, H, hd)
+    y = y + p["D_skip"][None, None, :, None] * xs.reshape(B_, S, H, hd).astype(jnp.float32)
+    out = _finish(p, y, z, x.dtype, cfg)
+    return out, {"state": s_last.reshape(B_, H, hd, N), "conv": conv_state}
+
+
+def ssd_decode(p, x, cache, cfg: ArchConfig):
+    """One-step decode. x (B,1,D); cache {state (B,H,hd,N) f32, conv}."""
+    d_inner, H, G, N, hd = dims(cfg)
+    z, xs, Bm, Cm, dtv, conv_state = _project(p, x, cfg, cache["conv"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp((dtv * A)[:, 0])  # (B,H)
+    Hg = H // G
+    state = cache["state"].reshape(x.shape[0], G, Hg, hd, N)
+    xs1 = xs[:, 0].reshape(-1, G, Hg, hd)
+    bx = jnp.einsum(
+        "bgn,bgh,bghp->bghpn",
+        Bm[:, 0],
+        dtv[:, 0].reshape(-1, G, Hg),
+        xs1.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    state = dA.reshape(-1, G, Hg)[..., None, None] * state + bx
+    y = jnp.einsum("bgn,bghpn->bghp", Cm[:, 0].astype(jnp.float32), state)
+    y = y.reshape(x.shape[0], 1, H, hd) + p["D_skip"][None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    out = _finish(p, y, z, x.dtype, cfg)
+    return out, {"state": state.reshape(x.shape[0], H, hd, N), "conv": conv_state}

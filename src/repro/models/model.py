@@ -1,0 +1,356 @@
+"""Model: init / train-loss / prefill / decode over scanned segment stacks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import blocks as B
+from repro.models.layers.common import (
+    apply_norm,
+    dense_init,
+    embed_tokens,
+    init_embeddings,
+    init_norm,
+    sinusoidal_pos_emb,
+    unembed,
+)
+from repro.sharding.rules import constrain_params, shard
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig):
+    segs = B.build_segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params = {"embed": init_embeddings(keys[0], cfg), "final_norm": init_norm(cfg, cfg.d_model)}
+    for i, seg in enumerate(segs):
+        seg_p = {}
+        for j, kind in enumerate(seg.unit):
+            ks = jax.random.split(jax.random.fold_in(keys[i + 1], j), seg.count)
+            seg_p[f"sub{j}"] = jax.vmap(lambda k, kind=kind: B.init_block(k, kind, cfg))(ks)
+        params[f"seg{i}"] = seg_p
+    if cfg.mtp_depth > 0:
+        km = keys[-1]
+        params["mtp"] = {
+            "norm_h": init_norm(cfg, cfg.d_model),
+            "norm_e": init_norm(cfg, cfg.d_model),
+            "in_proj_mtp": dense_init(
+                jax.random.fold_in(km, 0), (2 * cfg.d_model, cfg.d_model), jnp.dtype(cfg.param_dtype)
+            ),
+            "block": B.init_block(jax.random.fold_in(km, 1), "attn_moe" if cfg.moe else "attn", cfg),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def active_params(cfg: ArchConfig, params) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    total = count_params(params)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = cfg.d_model * m.d_ff_expert * 3
+    n_moe_layers = sum(1 for k in cfg.layer_kinds() if k == "attn_moe")
+    if cfg.mtp_depth > 0:
+        n_moe_layers += 1
+    inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# embedding of inputs
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """-> x (B,S,D), positions, token_ids (B,S)."""
+    if cfg.input_mode == "tokens":
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, cfg)
+        Bsz, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+        token_ids = tokens
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+        Bsz, S = x.shape[:2]
+        token_ids = batch.get("tokens", batch.get("targets", jnp.zeros((Bsz, S), jnp.int32)))
+        if cfg.input_mode == "embeds_mrope":
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    if cfg.pos_emb == "sinusoidal":
+        pos1 = positions if positions.ndim == 2 else positions[-1]
+        x = x + sinusoidal_pos_emb(pos1, cfg.d_model).astype(x.dtype)
+    return shard(x, "dp", None, None), positions, token_ids
+
+
+# ---------------------------------------------------------------------------
+# segment scan machinery
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _scan_segment_train(seg_p, seg: B.Segment, x, positions, token_ids, cfg: ArchConfig):
+    seg_p = constrain_params(seg_p)
+
+    def unit_fn(x, params_t, step):
+        aux = jnp.float32(0.0)
+        for j, kind in enumerate(seg.unit):
+            salt = seg.base + step * len(seg.unit) + j
+            x, a = B.block_train(params_t[f"sub{j}"], kind, x, positions, token_ids, salt, cfg)
+            aux = aux + a
+        return x, aux
+
+    unit = _remat(unit_fn, cfg)
+
+    if seg.count == 1:
+        params_t = jax.tree.map(lambda a: a[0], seg_p)
+        return unit(x, params_t, 0)
+
+    def body(carry, xs):
+        x, aux_tot = carry
+        params_t, step = xs
+        x, aux = unit(x, params_t, step)
+        return (x, aux_tot + aux), None
+
+    (x, aux_tot), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (seg_p, jnp.arange(seg.count))
+    )
+    return x, aux_tot
+
+
+def trunk_train(params, batch, cfg: ArchConfig):
+    """-> (hidden (B,S,D) after final norm, aux_loss, token embedding aux)."""
+    x, positions, token_ids = _embed_inputs(params, batch, cfg)
+    aux_tot = jnp.float32(0.0)
+    for i, seg in enumerate(B.build_segments(cfg)):
+        x, aux = _scan_segment_train(params[f"seg{i}"], seg, x, positions, token_ids, cfg)
+        aux_tot = aux_tot + aux
+    return apply_norm(params["final_norm"], x, cfg), aux_tot, positions, token_ids
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked CE to avoid materialising (B,S,V) fp32 logits)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(params, hidden, targets, cfg: ArchConfig, chunk: int = 512):
+    """Mean CE over valid (target >= 0) tokens; vocab logits per seq-chunk."""
+    Bsz, S, D = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    def chunk_loss(h_c, t_c):
+        logits = unembed(params["embed"], h_c, cfg)  # fp32 (B,c,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(t_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (t_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * valid), jnp.sum(valid)
+
+    chunk_loss = _remat(chunk_loss, cfg)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, t_c = xs
+        l, c = chunk_loss(h_c, t_c)
+        return (tot + l, cnt + c), None
+
+    h_r = jnp.moveaxis(hidden.reshape(Bsz, nc, chunk, D), 1, 0)
+    t_r = jnp.moveaxis(targets.reshape(Bsz, nc, chunk), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (h_r, t_r))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    hidden, aux, positions, token_ids = trunk_train(params, batch, cfg)
+    targets = batch["targets"]
+    ce = chunked_ce(params, hidden, targets, cfg)
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        mtp = params["mtp"]
+        emb_next = jnp.pad(
+            embed_tokens(params["embed"], batch["tokens"], cfg)[:, 1:], ((0, 0), (0, 1), (0, 0))
+        )
+        h_in = jnp.concatenate(
+            [apply_norm(mtp["norm_h"], hidden, cfg), apply_norm(mtp["norm_e"], emb_next, cfg)],
+            axis=-1,
+        )
+        h_in = jnp.einsum("bsd,dm->bsm", h_in, mtp["in_proj_mtp"])
+        kind = "attn_moe" if cfg.moe else "attn"
+        h_mtp, _ = B.block_train(mtp["block"], kind, h_in, positions, token_ids, 9999, cfg)
+        h_mtp = apply_norm(mtp["final_norm"], h_mtp, cfg)
+        t_mtp = jnp.pad(targets[:, 1:], ((0, 0), (0, 1)), constant_values=-1)
+        mtp_ce = chunked_ce(params, h_mtp, t_mtp, cfg)
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    cache = {"cur": jnp.zeros((), jnp.int32)}
+    for i, seg in enumerate(B.build_segments(cfg)):
+        seg_c = {}
+        for j, kind in enumerate(seg.unit):
+            c1 = B.init_block_cache(kind, cfg, batch, B.block_cache_len(kind, cfg, max_len))
+            seg_c[f"sub{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (seg.count,) + a.shape), c1
+            )
+        cache[f"seg{i}"] = seg_c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int):
+    """-> (cache, last-token logits (B, V))."""
+    x, positions, token_ids = _embed_inputs(params, batch, cfg)
+    Bsz, S = x.shape[:2]
+    cache = {"cur": jnp.full((), S, jnp.int32)}
+    for i, seg in enumerate(B.build_segments(cfg)):
+        seg_p = constrain_params(params[f"seg{i}"])
+
+        def unit_fn(x, params_t, step, seg=seg):
+            caches = {}
+            for j, kind in enumerate(seg.unit):
+                salt = seg.base + step * len(seg.unit) + j
+                x, c, _ = B.block_prefill(
+                    params_t[f"sub{j}"], kind, x, positions, token_ids, salt, cfg,
+                    B.block_cache_len(kind, cfg, max_len),
+                )
+                caches[f"sub{j}"] = c
+            return x, caches
+
+        unit = _remat(unit_fn, cfg)
+
+        if seg.count == 1:
+            params_t = jax.tree.map(lambda a: a[0], seg_p)
+            x, caches = unit(x, params_t, 0)
+            cache[f"seg{i}"] = jax.tree.map(lambda a: a[None], caches)
+        else:
+
+            def body(x, xs):
+                params_t, step = xs
+                x, caches = unit(x, params_t, step)
+                return x, caches
+
+            x, caches = jax.lax.scan(body, x, (seg_p, jnp.arange(seg.count)))
+            cache[f"seg{i}"] = caches
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return cache, logits
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig):
+    """One token for the whole batch. -> (new_cache, logits (B, V))."""
+    pos = cache["cur"]
+    if cfg.input_mode == "tokens":
+        tokens = batch["tokens"]  # (B, 1)
+        x = embed_tokens(params["embed"], tokens, cfg)
+        token_ids = tokens
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+        token_ids = jnp.zeros(x.shape[:2], jnp.int32)
+    if cfg.pos_emb == "sinusoidal":
+        Bsz = x.shape[0]
+        pos1 = jnp.full((Bsz, 1), pos, jnp.int32)
+        x = x + sinusoidal_pos_emb(pos1, cfg.d_model).astype(x.dtype)
+
+    new_cache = {"cur": pos + 1}
+    for i, seg in enumerate(B.build_segments(cfg)):
+        seg_p = params[f"seg{i}"]  # no carry anchor: decode graphs are small and
+        # the constraint copies cost more than they save here (§Perf)
+        seg_c = cache[f"seg{i}"]
+
+        def unit_fn(x, params_t, caches_t, step, seg=seg):
+            new_c = {}
+            for j, kind in enumerate(seg.unit):
+                salt = seg.base + step * len(seg.unit) + j
+                x, c = B.block_decode(
+                    params_t[f"sub{j}"], kind, x, pos, caches_t[f"sub{j}"], token_ids, salt, cfg
+                )
+                new_c[f"sub{j}"] = c
+            return x, new_c
+
+        if seg.count == 1:
+            params_t = jax.tree.map(lambda a: a[0], seg_p)
+            caches_t = jax.tree.map(lambda a: a[0], seg_c)
+            x, nc = unit_fn(x, params_t, caches_t, 0)
+            new_cache[f"seg{i}"] = jax.tree.map(lambda a: a[None], nc)
+        else:
+
+            def body(x, xs):
+                params_t, caches_t, step = xs
+                x, nc = unit_fn(x, params_t, caches_t, step)
+                return x, nc
+
+            x, ncs = jax.lax.scan(body, x, (seg_p, seg_c, jnp.arange(seg.count)))
+            new_cache[f"seg{i}"] = ncs
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Returns the batch pytree of ShapeDtypeStructs for the given shape."""
+    Bsz = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            return {"tokens": f((Bsz, S), jnp.int32), "targets": f((Bsz, S), jnp.int32)}
+        batch = {
+            "embeds": f((Bsz, S, cfg.d_model), jnp.bfloat16),
+            "targets": f((Bsz, S), jnp.int32),
+        }
+        if cfg.input_mode == "embeds_mrope":
+            batch["positions"] = f((3, Bsz, S), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"tokens": f((Bsz, S), jnp.int32)}
+        batch = {"embeds": f((Bsz, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.input_mode == "embeds_mrope":
+            batch["positions"] = f((3, Bsz, S), jnp.int32)
+        return batch
+    # decode
+    if cfg.input_mode == "tokens":
+        return {"tokens": f((Bsz, 1), jnp.int32)}
+    return {"embeds": f((Bsz, 1, cfg.d_model), jnp.bfloat16)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, shape.seq_len))

@@ -1,0 +1,72 @@
+"""Key -> node assignment tables and movement accounting.
+
+The control-plane face of the paper: given a set of logical keys (data
+shards, experts, checkpoint shards, sessions) and a cluster size, produce the
+assignment and — on resize — the minimal movement plan, with stats that the
+tests check against the paper's guarantees (movement fraction ~ delta/n).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+from repro.core import make
+
+
+@dataclass(frozen=True)
+class Move:
+    key: int
+    src: int
+    dst: int
+
+
+@dataclass
+class MovementPlan:
+    moves: list[Move]
+    total_keys: int
+
+    @property
+    def moved_fraction(self) -> float:
+        return len(self.moves) / max(self.total_keys, 1)
+
+    def destinations(self) -> set[int]:
+        return {m.dst for m in self.moves}
+
+    def sources(self) -> set[int]:
+        return {m.src for m in self.moves}
+
+
+class Assignment:
+    """Consistent assignment of a fixed key universe onto n nodes."""
+
+    def __init__(self, keys: Sequence[int], n: int, engine: str = "binomial"):
+        self.keys = list(keys)
+        self.engine_name = engine
+        self.engine = make(engine, n)
+
+    @property
+    def n(self) -> int:
+        return self.engine.size
+
+    def table(self) -> dict[int, int]:
+        return {k: self.engine.get_bucket(k) for k in self.keys}
+
+    def by_node(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {b: [] for b in range(self.n)}
+        for k in self.keys:
+            out[self.engine.get_bucket(k)].append(k)
+        return out
+
+    def resize(self, new_n: int) -> MovementPlan:
+        """Scale to new_n (LIFO adds/removes), returning the movement plan."""
+        before = self.table()
+        while self.engine.size < new_n:
+            self.engine.add_bucket()
+        while self.engine.size > new_n:
+            self.engine.remove_bucket()
+        after = self.table()
+        moves = [Move(k, before[k], after[k]) for k in self.keys if before[k] != after[k]]
+        return MovementPlan(moves, len(self.keys))
+
+    def load(self) -> list[int]:
+        return [len(v) for v in self.by_node().values()]

@@ -1,0 +1,82 @@
+"""Elastic-scaling planners: minimal-migration plans for framework assets.
+
+Three consumers:
+* expert-parallel groups — expert -> device placement when the EP group grows
+  or shrinks (MoE elastic scaling);
+* data hosts — file-shard -> host placement (pipeline rescale, stragglers);
+* failure handling — arbitrary node loss via the Memento wrapper.
+
+Everything here is host-side control plane (pure python ints); the device
+mesh consumes the resulting placements as sharding metadata.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import MementoWrapper, make
+from repro.placement.assignment import Assignment, MovementPlan
+
+
+@dataclass
+class ExpertMigration:
+    """Expert -> device migration plan between EP group sizes."""
+
+    plan: MovementPlan
+    old_devices: int
+    new_devices: int
+    num_experts: int
+
+    @property
+    def bytes_moved(self) -> int:  # filled by caller with per-expert bytes
+        return len(self.plan.moves)
+
+
+def plan_expert_migration(
+    num_experts: int, old_devices: int, new_devices: int, engine: str = "binomial"
+) -> ExpertMigration:
+    """Place experts on devices consistently; return the minimal migration.
+
+    Monotonicity guarantees that on scale-up only experts moving TO new
+    devices migrate, and on scale-down only experts FROM removed devices.
+    """
+    a = Assignment(list(range(num_experts)), old_devices, engine)
+    plan = a.resize(new_devices)
+    return ExpertMigration(plan, old_devices, new_devices, num_experts)
+
+
+def plan_shard_reassignment(
+    num_shards: int, old_hosts: int, new_hosts: int, engine: str = "binomial"
+) -> MovementPlan:
+    """Data file-shard -> host reassignment on pipeline rescale."""
+    a = Assignment(list(range(num_shards)), old_hosts, engine)
+    return a.resize(new_hosts)
+
+
+class FailureDomain:
+    """Arbitrary-failure placement built on the Memento-style wrapper.
+
+    Used by the serving router and the checkpoint manager: lookups always
+    return an alive node; failures/recoveries move only the affected keys.
+    """
+
+    def __init__(self, n: int, engine: str = "binomial"):
+        self._eng = MementoWrapper(lambda m: make(engine, m), n)
+
+    @property
+    def alive_count(self) -> int:
+        return self._eng.size
+
+    def locate(self, key: int) -> int:
+        return self._eng.get_bucket(key)
+
+    def fail(self, node: int) -> None:
+        self._eng.remove_bucket(node)
+
+    def recover(self, node: int) -> None:
+        self._eng.restore_bucket(node)
+
+    def scale_up(self) -> int:
+        return self._eng.add_bucket()
+
+    def scale_down(self) -> int:
+        return self._eng.remove_bucket()

@@ -1,0 +1,96 @@
+"""Roofline terms for a compiled (SPMD-partitioned, per-device) module.
+
+compute term    = HLO_FLOPs / peak_FLOP/s
+memory term     = HLO_bytes / HBM_bw
+collective term = collective_bytes / link_bw
+
+Primary source: the post-SPMD-partitioning HLO dump parsed trip-aware by
+``hlo_parse`` (XLA's cost_analysis() counts every while body once and the
+CPU backend promotes bf16->f32, both of which corrupt the terms — see
+hlo_parse docstring).  cost_analysis() numbers are kept as ``raw_*`` for
+reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.roofline import hw
+from repro.roofline.hlo_parse import analyze_hlo_text
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    dcn_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: dict
+    raw_flops: float
+    raw_bytes: float
+
+    def row(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+def analyze(
+    compiled,
+    n_chips: int,
+    model_flops_total: float,
+    hlo_text: str | None = None,
+    pod_group_size: int = 1,
+) -> Roofline:
+    """model_flops_total: 6·N·D (train) or 2·N·D (fwd-only), WHOLE program."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+    if hlo_text is None:
+        hlo_text = compiled.as_text()
+    cost = analyze_hlo_text(hlo_text, pod_group_size)
+    compute_s = cost.flops / hw.PEAK_FLOPS_BF16
+    memory_s = cost.bytes / hw.HBM_BW
+    collective_s = cost.coll_bytes / hw.ICI_LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_total / max(cost.flops * n_chips, 1.0)
+    return Roofline(
+        flops=cost.flops,
+        hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        dcn_bytes=cost.dcn_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_total,
+        useful_ratio=useful,
+        collectives={k: tuple(v) for k, v in cost.coll_by_kind.items()},
+        raw_flops=raw_flops,
+        raw_bytes=raw_bytes,
+    )
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out

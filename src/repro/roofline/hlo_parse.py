@@ -1,0 +1,264 @@
+"""Trip-count-aware cost analysis over post-SPMD-partitioning HLO text.
+
+Why this stage of the pipeline (dumped via --xla_dump_hlo_pass_re):
+* it is PER-DEVICE (collectives materialised) — the roofline unit we need;
+* dtypes are still true (the CPU backend later promotes bf16->f32, which
+  would inflate every byte count 2x and add promotion converts that do not
+  exist on TPU);
+* XLA's own cost_analysis() visits each ``while`` body once, so scanned
+  models (layers / attention chunks / CE chunks) are under-counted by the
+  trip count — here we multiply through the loop nest ourselves (trip counts
+  recovered from the loop-condition ``compare(_, constant)``).
+
+Cost model per op (documented in EXPERIMENTS.md §Roofline):
+* flops — ``dot`` ops only: 2 * prod(result dims) * contracted size.
+  Elementwise flops are negligible for these models.
+* bytes — tensor-granularity approximation of fused traffic:
+    - dot/reduce/reduce-window/sort/gather/scatter/concatenate/transpose/
+      pad/convolution: 2 x result bytes (one write + one read downstream);
+    - dynamic-slice: 2 x slice bytes; dynamic-update-slice: 2 x update bytes
+      (in-place);
+    - collectives: operand + result bytes;
+    - elementwise ops are assumed fused (skipped) INSIDE loop bodies, but
+      counted (2 x result) in the entry computation, where the optimizer
+      update / loss tail run at tensor granularity.
+* collective bytes — operand bytes by kind; groups whose size matches the
+  pod axis are classified DCN on multi-pod meshes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.roofline import hw
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_MATERIALIZE = {
+    "dot", "reduce", "reduce-window", "sort", "gather", "scatter",
+    "concatenate", "transpose", "pad", "convolution", "select-and-scatter",
+    "copy", "iota-large",
+}
+_SHAPE_ONLY = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "iota",
+    "while", "call", "conditional", "custom-call", "broadcast",
+}
+
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_SIG = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\]))")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONST_VAL = re.compile(r"constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)")
+
+
+def _nbytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * hw.BYTES_PER_DTYPE.get(dtype, 4)
+    return total
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    shape: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    params: dict = field(default_factory=dict)
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> tuple[dict[str, "Computation"], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            is_entry = line.startswith("ENTRY")
+            m = _COMP_HEAD.match(line[5:].strip() if is_entry else line)
+            if m:
+                cur = Computation(m.group(1), is_entry)
+                for pname, pshape in _PARAM_SIG.findall(m.group(2)):
+                    cur.params[pname] = pshape
+                    cur.symbols[pname] = pshape
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF.match(line)
+        if m:
+            name, shape, kind, rest = m.groups()
+            cur.ops.append(Op(name, kind, shape, rest))
+            cur.symbols[name] = shape
+    return comps, entry
+
+
+def _split_operands_attrs(rest: str) -> tuple[str, str]:
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1 :]
+    return rest, ""
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    operands, attrs = _split_operands_attrs(op.rest)
+    names = _OPERAND.findall(operands)
+    if not names:
+        return 0.0
+    lhs_dims = _dims(comp.symbols.get(names[0], ""))
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+    contracted = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                contracted *= lhs_dims[int(d)]
+    out = 1
+    for d in _dims(op.shape):
+        out *= d
+    return 2.0 * out * contracted
+
+
+def _trip_count(cond: Computation, attrs: str) -> int:
+    m = _TRIP_CFG.search(attrs)
+    if m:
+        return int(m.group(1))
+    # recover from the condition: compare(induction, constant(N)) / LT
+    consts = {}
+    for op in cond.ops:
+        cm = _CONST_VAL.search(op.kind + "(" + op.rest)
+        if op.kind == "constant":
+            vm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if vm:
+                consts[op.name] = int(vm.group(1))
+    for op in cond.ops:
+        if op.kind == "compare" and "direction=LT" in op.rest:
+            for n in _OPERAND.findall(_split_operands_attrs(op.rest)[0]):
+                if n in consts:
+                    return consts[n]
+    return 1
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.dcn_bytes += other.dcn_bytes * mult
+        for k, (c, b) in other.coll_by_kind.items():
+            e = self.coll_by_kind.setdefault(k, [0, 0])
+            e[0] += c * mult
+            e[1] += b * mult
+
+
+def _comp_cost(comp: Computation, comps: dict, memo: dict, pod_group_size: int) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    cost = Cost()
+    memo[comp.name] = cost
+    for op in comp.ops:
+        operands, attrs = _split_operands_attrs(op.rest)
+        kind = op.kind
+        if kind == "dot":
+            cost.flops += _dot_flops(op, comp)
+            cost.bytes += 2 * _nbytes(op.shape) + sum(
+                _nbytes(comp.symbols.get(n, "")) for n in _OPERAND.findall(operands)
+            )
+        elif kind == "while":
+            body = cond = None
+            bm = re.search(r"body=%([\w.\-]+)", attrs)
+            cm = re.search(r"condition=%([\w.\-]+)", attrs)
+            if bm:
+                body = comps.get(bm.group(1))
+            if cm:
+                cond = comps.get(cm.group(1))
+            trips = _trip_count(cond, attrs) if cond else 1
+            if body:
+                cost.add(_comp_cost(body, comps, memo, pod_group_size), trips)
+        elif kind in ("call",):
+            cm = re.search(r"to_apply=%([\w.\-]+)", attrs)
+            if cm and cm.group(1) in comps:
+                cost.add(_comp_cost(comps[cm.group(1)], comps, memo, pod_group_size), 1.0)
+        elif any(kind.startswith(c) for c in _COLL):
+            if kind.endswith("-done"):
+                continue
+            ob = sum(_nbytes(comp.symbols.get(n, "")) for n in _OPERAND.findall(operands))
+            base = kind.replace("-start", "")
+            cost.coll_bytes += ob
+            gm = _GROUPS.search(attrs)
+            if gm and pod_group_size > 1 and int(gm.group(2)) == pod_group_size:
+                cost.dcn_bytes += ob
+            e = cost.coll_by_kind.setdefault(base, [0, 0])
+            e[0] += 1
+            e[1] += ob
+            cost.bytes += ob + _nbytes(op.shape)
+        elif kind == "dynamic-slice":
+            cost.bytes += 2 * _nbytes(op.shape)
+        elif kind == "dynamic-update-slice":
+            names = _OPERAND.findall(operands)
+            upd = _nbytes(comp.symbols.get(names[1], "")) if len(names) > 1 else _nbytes(op.shape)
+            cost.bytes += 2 * upd
+        elif kind == "fusion":
+            cm = re.search(r"calls=%([\w.\-]+)", attrs)
+            if cm and cm.group(1) in comps:
+                cost.add(_comp_cost(comps[cm.group(1)], comps, memo, pod_group_size), 1.0)
+        elif kind in _MATERIALIZE:
+            cost.bytes += 2 * _nbytes(op.shape)
+        elif kind in _SHAPE_ONLY:
+            continue
+        else:
+            # elementwise: assumed fused inside loop bodies; counted in entry
+            # (optimizer update / loss tail run at tensor granularity there)
+            if comp.is_entry:
+                cost.bytes += 2 * _nbytes(op.shape)
+    return cost
+
+
+def analyze_hlo_text(text: str, pod_group_size: int = 1) -> Cost:
+    comps, entry = parse_module(text)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    total = Cost()
+    total.add(_comp_cost(comps[entry], comps, {}, pod_group_size))
+    return total

@@ -1,0 +1,14 @@
+"""Target-hardware constants (TPU v5e) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+
+BYTES_PER_DTYPE = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}

@@ -1,0 +1,71 @@
+"""Serving-tier request router built on BinomialHash + Memento failures.
+
+Sessions (chat threads / users) are routed to replicas by consistent hashing
+so that (a) load is balanced (paper Eq. 3 bound), (b) a session sticks to its
+replica across requests — KV-cache / prefix-cache affinity — and (c) scaling
+the replica fleet up/down or losing a replica moves only the minimal set of
+sessions (whose prefixes must be re-prefetched; everyone else's cache stays
+hot).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import bits
+from repro.placement.elastic import FailureDomain
+
+
+@dataclass
+class RoutingStats:
+    lookups: int = 0
+    moved_sessions: int = 0
+    events: list = field(default_factory=list)
+
+
+class SessionRouter:
+    def __init__(self, n_replicas: int, engine: str = "binomial"):
+        self.domain = FailureDomain(n_replicas, engine)
+        self.stats = RoutingStats()
+        self._last: dict[int, int] = {}  # session -> replica (observability only)
+
+    @staticmethod
+    def session_key(session_id: str | int) -> int:
+        if isinstance(session_id, str):
+            h = 0xCBF29CE484222325
+            for b in session_id.encode():
+                h = ((h ^ b) * 0x100000001B3) & bits.MASK64
+            return h
+        return bits.mix64(session_id)
+
+    def route(self, session_id: str | int) -> int:
+        key = self.session_key(session_id)
+        replica = self.domain.locate(key)
+        self.stats.lookups += 1
+        prev = self._last.get(key)
+        if prev is not None and prev != replica:
+            self.stats.moved_sessions += 1
+        self._last[key] = replica
+        return replica
+
+    # -- fleet events -----------------------------------------------------------
+    def scale_up(self) -> int:
+        r = self.domain.scale_up()
+        self.stats.events.append(("scale_up", r))
+        return r
+
+    def scale_down(self) -> int:
+        r = self.domain.scale_down()
+        self.stats.events.append(("scale_down", r))
+        return r
+
+    def fail(self, replica: int) -> None:
+        self.domain.fail(replica)
+        self.stats.events.append(("fail", replica))
+
+    def recover(self, replica: int) -> None:
+        self.domain.recover(replica)
+        self.stats.events.append(("recover", replica))
+
+    @property
+    def alive(self) -> int:
+        return self.domain.alive_count

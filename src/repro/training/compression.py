@@ -1,0 +1,58 @@
+"""Gradient compression hooks for the cross-pod (DCN) data-parallel axis.
+
+On a real 2-pod mesh the pod-axis gradient all-reduce crosses DCN, which is
+an order of magnitude slower than ICI — compressing those reduces is a
+standard distributed-optimization trick.  In this framework the hooks are
+applied to the gradient pytree inside ``train_step``:
+
+* ``int8``  — per-tensor symmetric int8 quantise -> dequantise with error
+  feedback (residual carried in fp32 between steps);
+* ``topk``  — keep the top fraction of entries by magnitude, error feedback
+  for the rest;
+* ``none``  — identity.
+
+The quantise/dequantise round-trip inside the jitted step is the honest
+CPU-testable simulation of "reduce the quantised tensor"; on a real mesh the
+same hook brackets a ``shard_map``-wrapped ``psum`` over the ``pod`` axis
+(wired in launch/train.py when pods > 1).  Quality impact is what matters
+for convergence and is fully captured; tests assert the error-feedback
+property (compression error does not accumulate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g, err):
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def compress_topk(g, err, frac: float = 0.05):
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(gf) >= thresh, gf, 0.0)
+    return kept.astype(g.dtype), gf - kept
+
+
+def apply_compression(grads, err_state, kind: str, **kw):
+    """-> (compressed grads, new error state)."""
+    if kind == "none":
+        return grads, err_state
+    fn = {"int8": compress_int8, "topk": compress_topk}[kind]
+    out = jax.tree.map(lambda g, e: fn(g, e, **kw), grads, err_state)
+    is_t = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+        jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+    )

@@ -1,0 +1,211 @@
+"""Optimizers (pure-pytree, no external deps): AdamW and Adafactor.
+
+ZeRO-1 style optimizer-state sharding: state pspecs are derived from the
+param pspecs by assigning the first unsharded dim of each tensor to the
+``data`` axis (GSPMD then emits the reduce-scatter / all-gather pattern of a
+sharded optimizer automatically).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import current_mesh
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    master_weights: bool = True
+
+    def init(self, params):
+        st = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if self.master_weights:
+            # copy=True: when params are already fp32, astype would ALIAS the
+            # param buffer and donation would see the same buffer twice
+            st["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            )
+        return st
+
+    def update(self, grads, state, params, step):
+        lr = self.lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - self.b1**t
+        c2 = 1.0 - self.b2**t
+
+        def upd(g, m, v, ref, pdtype):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            new_ref = ref - step_ - lr * self.weight_decay * ref
+            return new_ref.astype(pdtype), m, v, new_ref
+
+        refs = state["master"] if self.master_weights else jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+        out = jax.tree.map(
+            lambda g, m, v, r, p: upd(g, m, v, r, p.dtype),
+            grads, state["m"], state["v"], refs, params,
+        )
+        first = lambda o: o[0]
+        is_t = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(first, out, is_leaf=is_t)
+        new_state = {
+            "m": jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+            "v": jax.tree.map(lambda o: o[2], out, is_leaf=is_t),
+        }
+        if self.master_weights:
+            new_state["master"] = jax.tree.map(lambda o: o[3], out, is_leaf=is_t)
+        return new_p, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory ~ O(rows + cols))
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr_fn: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(self, params):
+        # state is a flat list aligned with tree_flatten(params) order
+        def leaf(p):
+            if self._factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": [leaf(p) for p in jax.tree.leaves(params)]}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-self.decay)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], self.eps
+                    )
+                )
+                u = g / jnp.maximum(denom, self.eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v)
+                new_st = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            pf = p.astype(jnp.float32)
+            new_p = pf - lr * u - lr * self.weight_decay * pf
+            return new_p.astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        out = [upd(g, st, p) for g, st, p in zip(flat_g, state["f"], flat_p)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        return new_p, {"f": [o[1] for o in out]}
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100, total: int = 10000, **kw):
+    sched = warmup_cosine(lr, warmup, total)
+    if name == "adamw":
+        return AdamW(sched, **kw)
+    if name == "adafactor":
+        return Adafactor(sched, **kw)
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 state sharding
+# ---------------------------------------------------------------------------
+
+
+def zero1_pspecs(params, param_pspecs, opt_state):
+    """PartitionSpec tree for ``opt_state``: params' specs with the first
+    unsharded, large-enough dim additionally moved onto the data axis
+    (ZeRO-1 — GSPMD emits the reduce-scatter/all-gather pattern)."""
+    mesh = current_mesh()
+    data = mesh.shape.get("data", 1) if mesh is not None else 1
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_spec = jax.tree.leaves(param_pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def widen(spec: P, leaf) -> P:
+        used = {a for e in spec if e is not None for a in (e if isinstance(e, tuple) else (e,))}
+        new = list(spec) + [None] * (leaf.ndim - len(spec))
+        if "data" not in used:
+            for i, (dim, s) in enumerate(zip(leaf.shape, new)):
+                if s is None and dim >= data and dim % data == 0:
+                    new[i] = "data"
+                    break
+        return P(*new)
+
+    wide = [widen(s, l) for s, l in zip(flat_spec, flat_p)]
+    mirror = jax.tree_util.tree_unflatten(treedef, wide)
+
+    out = {}
+    for k, v in opt_state.items():
+        if k in ("m", "v", "master"):
+            out[k] = mirror
+        elif k == "f":  # Adafactor flat list
+            fl = []
+            for spec, leaf in zip(wide, flat_p):
+                ax = list(spec) + [None] * (leaf.ndim - len(spec))
+                if leaf.ndim >= 2 and leaf.shape[-1] > 1 and leaf.shape[-2] > 1:
+                    fl.append({"vr": P(*ax[:-1]), "vc": P(*(ax[:-2] + ax[-1:]))})
+                else:
+                    fl.append({"v": P(*ax)})
+            out[k] = fl
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out

@@ -1,0 +1,94 @@
+"""Train step: loss + grad + optimizer update, with microbatched gradient
+accumulation, global-norm clipping and optional gradient compression."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.training import compression as C
+
+
+@dataclass(frozen=True)
+class TrainHparams:
+    grad_accum: int = 1
+    clip_norm: float = 1.0
+    compression: str = "none"  # none | int8 | topk
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def make_train_state(params, optimizer, hp: TrainHparams):
+    state = {"params": params, "opt": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+    if hp.compression != "none":
+        state["comp_err"] = C.init_error_state(params)
+    return state
+
+
+def make_train_step(cfg: ArchConfig, optimizer, hp: TrainHparams = TrainHparams()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(M.loss_fn, has_aux=True)(params, batch, cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.grad_accum > 1:
+            # split the global batch into microbatches along dim 0
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), None
+
+            def split(x):
+                if x.ndim >= 2 and x.shape[0] == 3:  # mrope positions (3,B,S)
+                    b = x.shape[1]
+                    return jnp.moveaxis(
+                        x.reshape(3, hp.grad_accum, b // hp.grad_accum, *x.shape[2:]), 1, 0
+                    )
+                return x.reshape(hp.grad_accum, x.shape[0] // hp.grad_accum, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / hp.grad_accum, grads)
+            loss = loss / hp.grad_accum
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+
+        if hp.compression != "none":
+            grads, new_err = C.apply_compression(grads, state["comp_err"], hp.compression)
+        grads, gn = _clip_by_global_norm(grads, hp.clip_norm)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params, state["step"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        if hp.compression != "none":
+            new_state["comp_err"] = new_err
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gn
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ArchConfig, max_len: int):
+    """Returns (prefill_fn, decode_fn) with the model closed over cfg."""
+
+    def prefill_fn(params, batch):
+        return M.prefill(params, batch, cfg, max_len)
+
+    def decode_fn(params, cache, batch):
+        return M.decode_step(params, cache, batch, cfg)
+
+    return prefill_fn, decode_fn

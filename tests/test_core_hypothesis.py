@@ -1,0 +1,68 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binomial_lookup32, binomial_lookup64
+from repro.core.binomial import _relocate_within_level_64
+from repro.core.binomial_jax import binomial_lookup_vec, binomial_lookup_dyn
+from repro.core.bits import highest_one_bit_index, next_pow2
+
+keys64 = st.integers(min_value=0, max_value=(1 << 64) - 1)
+keys32 = st.integers(min_value=0, max_value=(1 << 32) - 1)
+sizes = st.integers(min_value=1, max_value=4096)
+
+
+@given(keys64, sizes)
+@settings(max_examples=300, deadline=None)
+def test_lookup_in_range(key, n):
+    assert 0 <= binomial_lookup64(key, n) < n
+
+
+@given(keys64, st.integers(min_value=1, max_value=2000))
+@settings(max_examples=200, deadline=None)
+def test_monotone_single_key(key, n):
+    b0 = binomial_lookup64(key, n)
+    b1 = binomial_lookup64(key, n + 1)
+    assert b1 == b0 or b1 == n  # moves only onto the new bucket
+
+
+@given(keys64, st.integers(min_value=2, max_value=2000))
+@settings(max_examples=200, deadline=None)
+def test_minimal_disruption_single_key(key, n):
+    b0 = binomial_lookup64(key, n)
+    b1 = binomial_lookup64(key, n - 1)
+    if b0 != n - 1:
+        assert b1 == b0  # survivors stay put
+
+
+@given(keys64, st.integers(min_value=2, max_value=1 << 40))
+@settings(max_examples=200, deadline=None)
+def test_relocation_preserves_level(h, b):
+    """Alg. 2: the relocated bucket stays within b's tree level."""
+    c = _relocate_within_level_64(b, h)
+    assert highest_one_bit_index(c) == highest_one_bit_index(b)
+
+
+@given(keys32, st.integers(min_value=1, max_value=512))
+@settings(max_examples=100, deadline=None)
+def test_vec_matches_scalar32(key, n):
+    v = int(np.asarray(binomial_lookup_vec(np.array([key], np.uint32), n))[0])
+    assert v == binomial_lookup32(key, n)
+
+
+@given(st.integers(min_value=1, max_value=100000))
+@settings(max_examples=200, deadline=None)
+def test_next_pow2(n):
+    E = next_pow2(n)
+    assert E >= n and E & (E - 1) == 0
+    if n > 1:
+        assert E < 2 * n
+
+
+@given(st.lists(keys32, min_size=1, max_size=64), st.integers(min_value=1, max_value=300))
+@settings(max_examples=50, deadline=None)
+def test_dyn_matches_static(keys, n):
+    ks = np.array(keys, np.uint32)
+    a = np.asarray(binomial_lookup_vec(ks, n))
+    b = np.asarray(binomial_lookup_dyn(ks, np.uint32(n)))
+    assert (a == b).all()

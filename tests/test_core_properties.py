@@ -1,0 +1,158 @@
+"""Consistent-hashing properties: the paper's §5 claims, empirically."""
+import collections
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CONSTANT_TIME,
+    FULLY_CONSISTENT,
+    ENGINES,
+    binomial_lookup32,
+    binomial_lookup64,
+    make,
+)
+from repro.core import analysis
+
+random.seed(1234)
+KEYS = [random.getrandbits(64) for _ in range(20000)]
+KEYS32 = [k & 0xFFFFFFFF for k in KEYS]
+
+
+# ---------------------------------------------------------------------------
+# range + determinism (every engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 11, 16, 17, 100])
+def test_range_and_determinism(name, n):
+    eng = make(name, n)
+    eng2 = make(name, n)
+    for k in KEYS[:2000]:
+        b = eng.get_bucket(k)
+        assert 0 <= b < n
+        assert b == eng2.get_bucket(k)
+
+
+# ---------------------------------------------------------------------------
+# monotonicity: n -> n+1 moves keys only onto the new bucket
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FULLY_CONSISTENT)
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 63, 64])
+def test_monotonicity(name, n):
+    eng = make(name, n)
+    before = [eng.get_bucket(k) for k in KEYS[:5000]]
+    new = eng.add_bucket()
+    after = [eng.get_bucket(k) for k in KEYS[:5000]]
+    moved = [(b, a) for b, a in zip(before, after) if b != a]
+    assert all(a == new for _, a in moved), f"{name}: moves must target only bucket {new}"
+    # movement fraction ~ 1/(n+1)
+    frac = len(moved) / 5000
+    assert frac < 2.5 / (n + 1) + 0.02, (name, n, frac)
+
+
+@pytest.mark.parametrize("name", ["fliphash-recon", "powerch-recon", "jumpback-recon"])
+@pytest.mark.parametrize("n", [9, 11, 17, 100])  # within a power-of-two block
+def test_monotonicity_recons_within_block(name, n):
+    """Reconstructions guarantee monotonicity only while E is unchanged
+    (documented in DESIGN.md §6)."""
+    eng = make(name, n)
+    before = [eng.get_bucket(k) for k in KEYS[:3000]]
+    new = eng.add_bucket()
+    after = [eng.get_bucket(k) for k in KEYS[:3000]]
+    moved = [(b, a) for b, a in zip(before, after) if b != a]
+    assert all(a == new for _, a in moved), name
+
+
+# ---------------------------------------------------------------------------
+# minimal disruption: removing bucket n-1 moves only its keys
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FULLY_CONSISTENT)
+@pytest.mark.parametrize("n", [2, 3, 8, 9, 16, 17, 33])
+def test_minimal_disruption(name, n):
+    eng = make(name, n)
+    before = {k: eng.get_bucket(k) for k in KEYS[:5000]}
+    removed = eng.remove_bucket()
+    for k in KEYS[:5000]:
+        after = eng.get_bucket(k)
+        if before[k] != removed:
+            assert after == before[k], f"{name}: keys of surviving buckets must not move"
+        else:
+            assert after != removed
+
+
+# ---------------------------------------------------------------------------
+# balance: empirical counts close to uniform (paper §5.4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", CONSTANT_TIME + ["binomial32"])
+@pytest.mark.parametrize("n", [11, 16, 60, 100])
+def test_balance(name, n):
+    eng = make(name, n)
+    cnt = collections.Counter(eng.get_bucket(k) for k in KEYS)
+    mean = len(KEYS) / n
+    rel_std = np.std([cnt.get(i, 0) for i in range(n)]) / mean
+    # uniform multinomial gives rel_std ~ sqrt(n/k); allow generous recon slack
+    bound = 4 * math.sqrt(n / len(KEYS)) + (0.30 if not make(name, n).exact else 0.06)
+    assert rel_std < bound, (name, n, rel_std, bound)
+
+
+# ---------------------------------------------------------------------------
+# paper theory: Eq. (3) imbalance bound and Eq. (5)/(6) std-dev
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("omega", [2, 4, 6])
+def test_eq3_imbalance_bound(omega):
+    for n in [9, 11, 13, 15]:
+        E, M = analysis.tree_bounds(n)
+        keys = KEYS
+        cnt = collections.Counter(binomial_lookup64(k, n, omega=omega) for k in keys)
+        k_minor = np.mean([cnt.get(i, 0) for i in range(M)])
+        k_low = np.mean([cnt.get(i, 0) for i in range(M, n)])
+        rel_gap = (k_minor - k_low) / (len(keys) / n)
+        predicted = analysis.relative_imbalance(n, omega)
+        # empirical gap should match the closed form within sampling noise
+        assert abs(rel_gap - predicted) < 0.08, (n, omega, rel_gap, predicted)
+        assert predicted <= 2 ** -omega + 1e-12
+
+
+def test_eq3_max_at_n_equals_M():
+    for omega in (2, 4, 6, 8):
+        vals = [analysis.relative_imbalance(n, omega) for n in range(17, 32)]
+        assert all(v <= 2**-omega + 1e-12 for v in vals)
+        assert vals == sorted(vals, reverse=True)  # monotonically decreasing in n
+
+
+def test_eq6_sigma_max():
+    q = 1000
+    for omega in (2, 5):
+        smax = analysis.sigma_max(q, omega)
+        M = 64
+        sig = [analysis.sigma(n, q * n, omega) for n in range(M, 2 * M)]
+        assert max(sig) <= smax * 1.001
+        n_star = analysis.sigma_argmax(M, omega)
+        assert abs(max(range(M, 2 * M), key=lambda n: analysis.sigma(n, q * n, omega)) - n_star) <= 1
+    assert abs(analysis.sigma_max(1.0, 5) - 0.045) < 2e-3  # paper: ~0.045q for ω=5
+
+
+# ---------------------------------------------------------------------------
+# u32 flavour matches u64 semantics (not bitwise — same guarantees)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 9, 17, 100])
+def test_u32_properties(n):
+    before = [binomial_lookup32(k, n) for k in KEYS32[:3000]]
+    after = [binomial_lookup32(k, n + 1) for k in KEYS32[:3000]]
+    assert all(0 <= b < n for b in before)
+    moved = [(b, a) for b, a in zip(before, after) if b != a]
+    assert all(a == n for _, a in moved)

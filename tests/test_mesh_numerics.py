@@ -1,0 +1,87 @@
+"""Numerical equivalence of the SHARDED paths vs single-device reference.
+
+The shard_map / GSPMD code paths never run in plain CPU unit tests (no
+mesh), so this test spawns a subprocess with 8 fake host devices, builds a
+(2, 4) mesh, and checks that loss/gradients of meshed models match the
+unmeshed reference — guarding exactly the class of bug where a sharded
+dispatch compiles happily but computes the wrong thing.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.sharding import rules
+
+results = {}
+for arch, elayout in [("qwen3-moe-235b-a22b", "ep"), ("qwen3-moe-235b-a22b", "tp"),
+                      ("deepseek-v3-671b", "ep"), ("stablelm-3b", "ep"),
+                      ("mamba2-1.3b", "ep")]:
+    cfg = reduced_config(arch)
+    if cfg.moe is not None:
+        # token counts large enough to exercise the shard_map sort path for
+        # "ep", small enough for the dense path check under decode later
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    rng = np.random.default_rng(0)
+    B, S = 4, 16
+    batch = {"targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    # reference: no mesh
+    ref_loss, _ = M.loss_fn(params, batch, cfg)
+    ref_grad = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with rules.mesh_context(mesh, fsdp=True, expert_layout=elayout):
+        pspecs = rules.params_pspecs(params)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        params_m = jax.device_put(params, psh)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), rules.batch_pspecs(batch),
+                           is_leaf=lambda x: isinstance(x, P))
+        batch_m = jax.device_put(batch, bsh)
+        loss_m, _ = jax.jit(lambda p, b: M.loss_fn(p, b, cfg))(params_m, batch_m)
+        grad_m = jax.jit(jax.grad(lambda p, b: M.loss_fn(p, b, cfg)[0]))(params_m, batch_m)
+
+    dl = abs(float(ref_loss) - float(loss_m))
+    gerr = max(
+        jax.tree.leaves(
+            jax.tree.map(
+                lambda a, b: float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(a)) + 1e-6)),
+                ref_grad, jax.device_get(grad_m),
+            )
+        )
+    )
+    results[f"{arch}/{elayout}"] = {"dloss": dl, "grad_rel_err": gerr}
+print("RESULTS " + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True, timeout=1200
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS ")][-1]
+    results = json.loads(line[len("RESULTS "):])
+    for key, r in results.items():
+        assert r["dloss"] < 2e-3, (key, r)
+        assert r["grad_rel_err"] < 0.05, (key, r)

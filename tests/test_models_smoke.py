@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step with
+finite loss + correct shapes, and cached-decode consistency vs full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config, SHAPES, shape_applicable
+from repro.models import model as M
+from repro.models.blocks import build_segments
+from repro.models.layers.common import unembed
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    else:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32) * 0.02)
+        if cfg.input_mode == "embeds_mrope":
+            batch["positions"] = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch):
+    cfg = reduced_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss)), arch
+    grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch):
+    cfg = reduced_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, S0 = 2, 16, 8
+    batch = _batch(cfg, B, S, seed=1)
+    hidden, _, _, _ = M.trunk_train(params, batch, cfg)
+    full_logits = unembed(params["embed"], hidden, cfg)
+    pre = {
+        k: (v[:, :S0] if k != "positions" else v[:, :, :S0])
+        for k, v in batch.items()
+        if k != "targets"
+    }
+    cache, logits = M.prefill(params, pre, cfg, max_len=S)
+    errs = [float(jnp.max(jnp.abs(logits - full_logits[:, S0 - 1])))]
+    for t in range(S0, S):
+        step = (
+            {"tokens": batch["tokens"][:, t : t + 1]}
+            if cfg.input_mode == "tokens"
+            else {"embeds": batch["embeds"][:, t : t + 1]}
+        )
+        cache, lg = M.decode_step(params, cache, step, cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - full_logits[:, t]))))
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_segments_cover_all_layers(arch):
+    cfg = get_config(arch)
+    segs = build_segments(cfg)
+    total = sum(len(s.unit) * s.count for s in segs)
+    assert total == cfg.num_layers, (arch, segs)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact assigned hyperparameters."""
+    spec = {
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    }[arch]
+    cfg = get_config(arch)
+    ff = cfg.moe.d_ff_expert if cfg.moe is not None else cfg.d_ff
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, ff, cfg.vocab_size) == spec
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8 and cfg.moe.shared_experts == 1
+        assert cfg.attention == "mla" and cfg.mtp_depth == 1
+    if arch == "qwen3-moe-235b-a22b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 8
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.d_state == 128
+
+
+def test_param_counts_in_family_range():
+    """Full configs land near their nameplate sizes (embedding included)."""
+    expect = {
+        "deepseek-coder-33b": (30e9, 36e9),
+        "starcoder2-7b": (6.5e9, 8.5e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "stablelm-3b": (2.5e9, 3.4e9),
+        "deepseek-v3-671b": (640e9, 700e9),
+        "qwen3-moe-235b-a22b": (220e9, 250e9),
+        "recurrentgemma-9b": (9e9, 12e9),
+        "mamba2-1.3b": (1.1e9, 1.5e9),
+        "musicgen-medium": (1.2e9, 1.7e9),
+        "qwen2-vl-7b": (7e9, 8.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        struct = jax.eval_shape(lambda cfg=cfg: M.init_params(jax.random.PRNGKey(0), cfg))
+        n = M.count_params(struct)
+        assert lo < n < hi, (arch, n)
+
+
+def test_long_500k_applicability_rule():
+    runnable = {a for a in ARCHS if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runnable == {"starcoder2-7b", "recurrentgemma-9b", "mamba2-1.3b"}

@@ -1,0 +1,78 @@
+"""Placement planners: assignments, elastic migration, failure domains."""
+import collections
+
+import pytest
+
+from repro.placement.assignment import Assignment
+from repro.placement.elastic import FailureDomain, plan_expert_migration, plan_shard_reassignment
+
+
+def test_assignment_balance():
+    a = Assignment(list(range(4096)), 16)
+    loads = a.load()
+    assert min(loads) > 0.6 * (4096 / 16)
+    assert max(loads) < 1.4 * (4096 / 16)
+
+
+@pytest.mark.parametrize("old,new", [(16, 17), (16, 20), (17, 16), (16, 8)])
+def test_assignment_resize_minimal(old, new):
+    a = Assignment(list(range(2048)), old)
+    plan = a.resize(new)
+    if new > old:
+        assert plan.destinations() <= set(range(old, new)), "moves only TO new nodes"
+        assert plan.moved_fraction < 1.5 * (new - old) / new + 0.05
+    else:
+        assert plan.sources() <= set(range(new, old)), "moves only FROM removed nodes"
+
+
+def test_expert_migration():
+    m = plan_expert_migration(256, 16, 18)
+    assert m.plan.destinations() <= {16, 17}
+    # ~ E/new_devices experts land on each new device
+    per_new = collections.Counter(mv.dst for mv in m.plan.moves)
+    for d in (16, 17):
+        assert 2 <= per_new[d] <= 40
+
+
+def test_shard_reassignment_shrink():
+    plan = plan_shard_reassignment(1024, 8, 6)
+    assert plan.sources() <= {6, 7}
+    assert plan.moved_fraction < 0.35
+
+
+def test_failure_domain_minimal_disruption():
+    fd = FailureDomain(10)
+    keys = list(range(5000))
+    before = {k: fd.locate(k) for k in keys}
+    fd.fail(3)
+    after = {k: fd.locate(k) for k in keys}
+    for k in keys:
+        if before[k] != 3:
+            assert after[k] == before[k], "only keys of the failed node move"
+        else:
+            assert after[k] != 3
+    # recovery: exactly the displaced keys return
+    fd.recover(3)
+    assert all(fd.locate(k) == before[k] for k in keys)
+
+
+def test_failure_domain_balance_under_failures():
+    fd = FailureDomain(12)
+    fd.fail(0)
+    fd.fail(5)
+    counts = collections.Counter(fd.locate(k) for k in range(12000))
+    assert 0 not in counts and 5 not in counts
+    loads = [counts[i] for i in range(12) if i not in (0, 5)]
+    assert max(loads) < 1.35 * (12000 / 10)
+    assert min(loads) > 0.65 * (12000 / 10)
+
+
+def test_failure_domain_scale_up_down():
+    fd = FailureDomain(4)
+    keys = list(range(2000))
+    before = {k: fd.locate(k) for k in keys}
+    new = fd.scale_up()
+    moved = {k for k in keys if fd.locate(k) != before[k]}
+    assert all(fd.locate(k) == new for k in moved)
+    fd.scale_down()
+    assert all(fd.locate(k) == before[k] for k in keys)

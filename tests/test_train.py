@@ -1,0 +1,104 @@
+"""Training substrate: optimizers actually learn; grad-accum is consistent;
+compression error feedback is bounded; clipping works."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.training import compression as C
+from repro.training.optimizer import make_optimizer
+from repro.training.train_step import TrainHparams, make_train_state, make_train_step
+
+
+def _tiny_batch(cfg, B=4, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]), "targets": jnp.asarray(toks[:, 1:])}
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_loss_decreases(opt_name):
+    cfg = reduced_config("stablelm-3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(opt_name, lr=1e-3, warmup=5, total=100)
+    hp = TrainHparams()
+    state = make_train_state(params, opt, hp)
+    step = jax.jit(make_train_step(cfg, opt, hp))
+    batch = _tiny_batch(cfg)  # overfit one small batch
+    losses = []
+    for _ in range(30):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = reduced_config("qwen2.5-14b")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    opt = make_optimizer("adamw", lr=1e-3)
+    batch = _tiny_batch(cfg, B=8)
+    s1 = make_train_state(params, opt, TrainHparams())
+    s2 = make_train_state(params, opt, TrainHparams(grad_accum=4))
+    s1, m1 = jax.jit(make_train_step(cfg, opt, TrainHparams()))(s1, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, opt, TrainHparams(grad_accum=4)))(s2, batch)
+    # same data -> same loss and (numerically) same updated params
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), s1["params"], s2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-5
+
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compression_error_feedback(kind):
+    """Error feedback conserves signal: transmitted + residual == sum of the
+    true gradients, EXACTLY — nothing is ever silently lost."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    err = {"w": jnp.zeros((64, 64), jnp.float32)}
+    total_compressed = jnp.zeros_like(g_true)
+    steps = 20
+    for i in range(steps):
+        comp, err = C.apply_compression({"w": g_true}, err, kind)
+        total_compressed = total_compressed + comp["w"]
+    recon = total_compressed + err["w"]
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g_true) * steps, rtol=1e-4, atol=1e-3)
+    # and the transmitted average converges toward the true gradient
+    rel = float(jnp.linalg.norm(total_compressed / steps - g_true) / jnp.linalg.norm(g_true))
+    assert rel < (0.05 if kind == "int8" else 0.45), rel
+
+
+def test_compression_trains():
+    cfg = reduced_config("stablelm-3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw", lr=1e-3, warmup=5, total=100)
+    hp = TrainHparams(compression="int8")
+    state = make_train_state(params, opt, hp)
+    step = jax.jit(make_train_step(cfg, opt, hp))
+    batch = _tiny_batch(cfg)
+    losses = []
+    for _ in range(25):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.4, losses[::6]
+
+
+def test_clip_norm_applied():
+    cfg = reduced_config("musicgen-medium")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw", lr=1e-3)
+    hp = TrainHparams(clip_norm=1e-9)  # absurdly small: updates ~ 0
+    state = make_train_state(params, opt, hp)
+    step = jax.jit(make_train_step(cfg, opt, hp))
+    rng = np.random.default_rng(0)
+    batch = {
+        "embeds": jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)).astype(np.float32)) * 0.02,
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)),
+    }
+    p0 = state["params"]
+    state, metrics = step(state, batch)
+    assert float(metrics["grad_norm"]) > 0
+    # movement dominated by weight decay only (tiny)
+    d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p0, state["params"])))
+    assert d < 1e-4
