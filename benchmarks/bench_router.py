@@ -1,0 +1,74 @@
+"""Routing throughput: scalar SessionRouter vs batched BatchRouter.
+
+Measures lookups/sec for (a) a steady batch stream and (b) a stream
+interleaved with scale/fail fleet events — the case the recompile-free
+dynamic-n datapath exists for.  CSV lands in benchmarks/out/router.csv.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, rows_to_csv
+from repro.serving.batch_router import BatchRouter
+from repro.serving.router import SessionRouter
+
+N_REPLICAS = 16
+BATCH = 1 << 16
+SCALAR_KEYS = 2000
+
+
+def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
+    t0 = time.perf_counter()
+    for k in keys:
+        router.domain.locate(int(k))
+    return len(keys) / (time.perf_counter() - t0)
+
+
+def _batch_rate(router: BatchRouter, keys: np.ndarray, iters: int = 5) -> float:
+    router.route_keys(keys)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        router.route_keys(keys)
+    return iters * len(keys) / (time.perf_counter() - t0)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**64, size=(BATCH,), dtype=np.uint64)
+    skeys = keys[:SCALAR_KEYS]
+
+    scalar = SessionRouter(N_REPLICAS, engine="binomial32", chain_bits=32)
+    batch = BatchRouter(N_REPLICAS)
+
+    rows = []
+    s_rate = _scalar_rate(scalar, skeys)
+    b_rate = _batch_rate(batch, keys)
+    rows.append(["steady", f"{s_rate:.0f}", f"{b_rate:.0f}", f"{b_rate / s_rate:.1f}"])
+    emit("router_scalar_steady", 1e6 / s_rate, f"{s_rate:.0f} lookups/s")
+    emit("router_batch_steady", 1e6 / b_rate, f"{b_rate:.0f} lookups/s ({b_rate/s_rate:.0f}x)")
+
+    # event storm: one fleet event per batch — the dynamic-n path must not
+    # recompile, the scalar path re-walks its chains either way
+    events = [("fail", 3), ("scale_up", None), ("recover", 3), ("scale_down", None)] * 2
+    t0 = time.perf_counter()
+    for ev, arg in events:
+        getattr(batch, ev)(*(() if arg is None else (arg,)))
+        batch.route_keys(keys)
+    b_ev = len(events) * BATCH / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for ev, arg in events:
+        getattr(scalar, ev)(*(() if arg is None else (arg,)))
+        for k in skeys:
+            scalar.domain.locate(int(k))
+    s_ev = len(events) * SCALAR_KEYS / (time.perf_counter() - t0)
+    rows.append(["event_storm", f"{s_ev:.0f}", f"{b_ev:.0f}", f"{b_ev / s_ev:.1f}"])
+    emit("router_scalar_events", 1e6 / s_ev, f"{s_ev:.0f} lookups/s")
+    emit("router_batch_events", 1e6 / b_ev, f"{b_ev:.0f} lookups/s ({b_ev/s_ev:.0f}x)")
+
+    rows_to_csv("router", ["stream", "scalar_lps", "batch_lps", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    main()

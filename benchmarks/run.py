@@ -17,6 +17,7 @@ def main() -> None:
         bench_lookup,
         bench_moe_routing,
         bench_roofline,
+        bench_router,
         bench_theory,
     )
 
@@ -27,6 +28,7 @@ def main() -> None:
         ("theory (paper §5.4 Eqs. 1/3/5/6)", bench_theory),
         ("kernel (bulk lookup)", bench_kernel),
         ("moe routing (hash vs topk)", bench_moe_routing),
+        ("session routing (scalar vs batched)", bench_router),
         ("elastic placement", bench_elastic),
         ("roofline table (from dry-run)", bench_roofline),
     ]

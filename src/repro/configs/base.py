@@ -22,6 +22,12 @@ class MoEConfig:
     aux_loss_weight: float = 0.01
     capacity_factor: float = 1.25
     router_hash_omega: int = 16  # ω for the binomial hash router
+    # hash router only: route via the traced-n lookup (binomial_lookup_dyn),
+    # so standalone/eager routing passes (placement studies, routing sweeps)
+    # share one compiled router trace across expert counts. NOTE: inside a
+    # jitted model step num_experts is still a static config field, so the
+    # step itself retraces on resize regardless of this flag.
+    router_dynamic_n: bool = False
 
 
 @dataclass(frozen=True)

@@ -43,6 +43,22 @@ def hash_pair(h: jax.Array, f: jax.Array) -> jax.Array:
     return mix32(h.astype(jnp.uint32) ^ mix32(f.astype(jnp.uint32) + GOLDEN32))
 
 
+def next_pow2_u32(n: jax.Array) -> jax.Array:
+    """Smallest power of two >= n, elementwise on uint32 (shift-or cascade).
+
+    Pure u32 shift/or ops — usable both in a jit trace and inside a Pallas
+    kernel body, so the dynamic-n kernel and ``binomial_lookup_dyn`` share
+    one E/M derivation (the bit that must stay identical for kernel == ref).
+    """
+    m = jnp.asarray(n, jnp.uint32) - np.uint32(1)
+    m = m | (m >> 1)
+    m = m | (m >> 2)
+    m = m | (m >> 4)
+    m = m | (m >> 8)
+    m = m | (m >> 16)
+    return m + np.uint32(1)
+
+
 def highest_one_bit_index(b: jax.Array) -> jax.Array:
     """floor(log2 b) for b >= 1, exact for all u32 (shift-or + popcount)."""
     b = b.astype(jnp.uint32)
@@ -110,14 +126,7 @@ def binomial_lookup_dyn(keys: jax.Array, n: jax.Array, omega: int = 16) -> jax.A
     """Bulk lookup with traced n (elastic cluster size, no recompile)."""
     keys_u32 = keys.astype(jnp.uint32)
     n_u32 = jnp.asarray(n, dtype=jnp.uint32)
-    # E = next_pow2(n) via shift-or cascade on (n-1); M = E/2.
-    m = n_u32 - np.uint32(1)
-    m = m | (m >> 1)
-    m = m | (m >> 2)
-    m = m | (m >> 4)
-    m = m | (m >> 8)
-    m = m | (m >> 16)
-    E = m + np.uint32(1)
+    E = next_pow2_u32(n_u32)
     M = E >> 1
     out = _unrolled_body(keys_u32, E, M, n_u32, omega)
     out = jnp.where(n_u32 <= 1, np.uint32(0), out)

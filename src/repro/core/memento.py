@@ -19,6 +19,14 @@ Properties (verified by tests):
 
 Memory is O(#removed); expected lookup cost is O(n_total / n_alive) extra
 hashes, i.e. O(1) while failures are a bounded fraction of the fleet.
+
+The rejection chain comes in two word sizes:
+
+* ``chain_bits=64`` (default) — splitmix64 chain, paper-faithful host flavour;
+* ``chain_bits=32`` — murmur3 fmix32 chain on ``key & MASK32``; the bit-exact
+  scalar oracle for the vectorised device remap in ``repro.core.memento_jax``
+  (TPUs have no 64-bit integer datapath).  Pair it with a u32 base engine
+  (``binomial32``) so the whole lookup+remap path shares one word size.
 """
 from __future__ import annotations
 
@@ -29,12 +37,15 @@ class MementoWrapper:
     name = "memento"
     exact = False  # reconstruction of the published description
 
-    def __init__(self, base_factory, n: int, max_chain: int = 4096):
+    def __init__(self, base_factory, n: int, max_chain: int = 4096, chain_bits: int = 64):
         """``base_factory(n) -> engine`` builds the underlying LIFO engine."""
+        if chain_bits not in (32, 64):
+            raise ValueError(f"chain_bits must be 32 or 64, got {chain_bits}")
         self._base_factory = base_factory
         self.base = base_factory(n)
         self.removed: set[int] = set()
         self.max_chain = max_chain
+        self.chain_bits = chain_bits
 
     # -- size/state ---------------------------------------------------------
     @property
@@ -78,15 +89,27 @@ class MementoWrapper:
         self.removed.discard(b)
 
     # -- lookup -------------------------------------------------------------
+    def _chain_step(self, key: int, b: int, i: int, total: int) -> int:
+        """Deterministic chain seeded by (key, failed slot, attempt)."""
+        if self.chain_bits == 64:
+            return bits.hash_pair64(bits.hash_iter64(key, i + 1), b) % total
+        return bits.hash_pair32(bits.hash_iter32(key & bits.MASK32, i + 1), b) % total
+
+    def first_alive(self) -> int:
+        """Lowest alive slot id (the max_chain-overflow fallback target)."""
+        for b in range(self.n_total):
+            if b not in self.removed:
+                return b
+        raise ValueError("no alive buckets")
+
     def get_bucket(self, key: int) -> int:
         b = self.base.get_bucket(key)
         if b not in self.removed:
             return b
         total = self.n_total
         for i in range(self.max_chain):
-            # deterministic chain seeded by (key, failed slot, attempt)
-            b = bits.hash_pair64(bits.hash_iter64(key, i + 1), b) % total
+            b = self._chain_step(key, b, i, total)
             if b not in self.removed:
                 return b
         # unreachable for any sane failure fraction; fall back to first alive
-        return self.alive()[0]
+        return self.first_alive()

@@ -1,0 +1,73 @@
+"""Vectorised Memento-style failure remap — the device half of the serving
+datapath.
+
+``MementoWrapper`` (scalar, host) diverts keys landing on removed slots down
+a deterministic rejection chain.  This module applies the identical chain to
+a whole batch of buckets on device, after the bulk BinomialHash lookup:
+
+    buckets = binomial_bulk_lookup_dyn(keys, n_total)       # Pallas kernel
+    buckets = memento_remap(keys, buckets, mask, n_total, first_alive)
+
+The replacement table is a single ``(capacity,)`` bool array (``mask[b]`` is
+True iff slot ``b`` is removed) — O(capacity) device bytes, updated on fleet
+events with one small host->device transfer.  ``capacity`` is a static upper
+bound on the fleet size, so the array shape — and therefore the compiled
+executable — is invariant across arbitrary scale/fail event streams;
+``n_total`` rides in as a traced scalar exactly like the kernel's n.
+
+Bit-exact against ``MementoWrapper(chain_bits=32)``: both sides step
+``b <- hash_pair32(hash_iter32(key, i+1), b) % n_total`` until an alive slot
+(tests enforce this).  The loop is a ``lax.while_loop`` over the *batch* —
+each round is one gather + one mix over all lanes, and the loop exits as
+soon as every lane has settled, so the expected cost is
+O(n_total / n_alive) rounds, O(1) while failures are a bounded fraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binomial_jax import hash_iter, hash_pair
+
+
+@functools.partial(jax.jit, static_argnames=("max_chain",))
+def memento_remap(
+    keys: jax.Array,
+    buckets: jax.Array,
+    removed_mask: jax.Array,
+    n_total: jax.Array,
+    first_alive: jax.Array,
+    max_chain: int = 4096,
+) -> jax.Array:
+    """Divert buckets that landed on removed slots onto alive ones.
+
+    keys         any int shape S (uint32 key space)
+    buckets      shape S, base-engine buckets in [0, n_total)
+    removed_mask (capacity,) bool, capacity >= n_total (fixed across events)
+    n_total      traced uint32 scalar — total slot space of the base engine
+    first_alive  traced uint32 scalar — fallback after max_chain rejections
+    """
+    shape = buckets.shape
+    keys_u32 = keys.reshape(-1).astype(jnp.uint32)
+    b = buckets.reshape(-1).astype(jnp.uint32)
+    total = jnp.asarray(n_total, jnp.uint32)
+    active = removed_mask[b]
+
+    def cond(state):
+        i, b, active = state
+        return (i < np.uint32(max_chain)) & jnp.any(active)
+
+    def body(state):
+        i, b, active = state
+        nb = hash_pair(hash_iter(keys_u32, i + np.uint32(1)), b) % total
+        b = jnp.where(active, nb, b)
+        return i + np.uint32(1), b, active & removed_mask[b]
+
+    _, b, active = jax.lax.while_loop(cond, body, (jnp.uint32(0), b, active))
+    # lanes that exhausted the chain fall back to the first alive slot,
+    # mirroring MementoWrapper.first_alive().
+    b = jnp.where(active, jnp.asarray(first_alive, jnp.uint32), b)
+    return b.astype(jnp.int32).reshape(shape)

@@ -1,4 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot spot: bulk consistent-hash
 lookup (binomial_hash.py) with jit'd dispatcher (ops.py) and pure-jnp oracle
-(ref.py). Validated in interpret mode on CPU; TPU is the target."""
-from repro.kernels.ops import binomial_bulk_lookup  # noqa: F401
+(ref.py). Validated in interpret mode on CPU; TPU is the target.
+
+``binomial_bulk_lookup`` bakes n into the trace (fastest steady state);
+``binomial_bulk_lookup_dyn`` takes n as a traced scalar-prefetch operand so
+elastic resize / failure events never recompile (the serving datapath)."""
+from repro.kernels.ops import binomial_bulk_lookup, binomial_bulk_lookup_dyn  # noqa: F401

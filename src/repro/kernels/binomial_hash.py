@@ -13,6 +13,22 @@ TPU adaptation of the paper's scalar hot loop (DESIGN.md §3):
 
 The kernel body reuses the exact jnp math from ``repro.core.binomial_jax``,
 so kernel == ref == scalar-u32-oracle is enforced transitively by tests.
+
+Two flavours of the same kernel body:
+
+* **static-n** (``binomial_bulk_lookup_2d`` / ``binomial_bulk_lookup_pallas``)
+  — ``n`` is a Python int baked into the trace; masks constant-fold, but any
+  change to the cluster size retraces and recompiles;
+* **dynamic-n** (``binomial_bulk_lookup_dyn_2d`` /
+  ``binomial_bulk_lookup_pallas_dyn``) — ``n`` rides in as a scalar-prefetch
+  operand (``pltpu.PrefetchScalarGridSpec``, landing in SMEM before the grid
+  body runs); ``E``/``M`` are derived in-kernel with the shift-or cascade, so
+  elastic scale-up/down and replica failures NEVER retrace.  This is the
+  serving datapath: ``repro.serving.batch_router.BatchRouter`` routes whole
+  request batches through this kernel, then applies the device-side
+  Memento-style failure remap (``repro.core.memento_jax``) to divert keys off
+  dead replicas — lookup + remap both on device, zero recompiles across
+  arbitrary scale/fail event streams.
 """
 from __future__ import annotations
 
@@ -22,8 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.binomial_jax import _unrolled_body
+from repro.core.binomial_jax import _unrolled_body, next_pow2_u32
 
 LANES = 128  # TPU minor-dim tile
 
@@ -81,6 +98,79 @@ def binomial_bulk_lookup_pallas(
     if padded != total:
         flat = jnp.pad(flat, (0, padded - total))
     out = binomial_bulk_lookup_2d(
+        flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(-1)[:total].reshape(keys.shape)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-n flavour: n is a scalar-prefetch operand, never baked into the
+# trace — elastic resize / failure events reuse one compiled executable.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_dyn(n_ref, keys_ref, out_ref, *, omega: int):
+    # E/M derived from the prefetched SMEM scalar with the same shift-or
+    # cascade as binomial_lookup_dyn (shared helper keeps kernel == ref).
+    n = n_ref[0].astype(jnp.uint32)
+    E = next_pow2_u32(n)
+    M = E >> 1
+    keys = keys_ref[...]
+    out = _unrolled_body(keys.astype(jnp.uint32), E, M, n, omega)
+    out = jnp.where(n <= np.uint32(1), np.uint32(0), out)
+    out_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("omega", "block_rows", "interpret")
+)
+def binomial_bulk_lookup_dyn_2d(
+    keys: jax.Array,
+    n: jax.Array,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(rows, 128) uint32 keys + traced scalar n -> (rows, 128) int32 buckets.
+
+    ``n`` may be a Python int, a 0-d array or a (1,)-array; it is traced, so
+    calling again with a different cluster size hits the same executable.
+    """
+    rows, lanes = keys.shape
+    if lanes != LANES:
+        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
+    if rows % block_rows != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
+    grid = (rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_dyn, omega=omega),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(n, jnp.uint32).reshape(1), keys.astype(jnp.uint32))
+
+
+def binomial_bulk_lookup_pallas_dyn(
+    keys: jax.Array,
+    n: jax.Array,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Any-shape int keys + traced n -> int32 buckets (recompile-free resize)."""
+    flat = keys.reshape(-1).astype(jnp.uint32)
+    total = flat.shape[0]
+    tile = block_rows * LANES
+    padded = (total + tile - 1) // tile * tile
+    if padded != total:
+        flat = jnp.pad(flat, (0, padded - total))
+    out = binomial_bulk_lookup_dyn_2d(
         flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows, interpret=interpret
     )
     return out.reshape(-1)[:total].reshape(keys.shape)

@@ -9,7 +9,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.binomial_hash import binomial_bulk_lookup_pallas
+from repro.core.binomial_jax import binomial_lookup_dyn
+from repro.kernels.binomial_hash import (
+    binomial_bulk_lookup_pallas,
+    binomial_bulk_lookup_pallas_dyn,
+)
 from repro.kernels.ref import binomial_bulk_lookup_ref
 
 
@@ -33,3 +37,27 @@ def binomial_bulk_lookup(
             keys, n, omega=omega, block_rows=block_rows, interpret=interpret
         )
     return binomial_bulk_lookup_ref(keys, n, omega=omega)
+
+
+def binomial_bulk_lookup_dyn(
+    keys: jax.Array,
+    n,
+    omega: int = 16,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_rows: int = 512,
+) -> jax.Array:
+    """Dynamic-n bulk lookup: n is traced, so resize events never retrace.
+
+    Dispatches to the scalar-prefetch Pallas kernel on TPU (or in interpret
+    mode) and to the pure-jnp ``binomial_lookup_dyn`` elsewhere; both keep a
+    single compiled executable across arbitrary n.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return binomial_bulk_lookup_pallas_dyn(
+            keys, n, omega=omega, block_rows=block_rows, interpret=interpret
+        )
+    return binomial_lookup_dyn(keys, n, omega=omega)

@@ -31,9 +31,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.binomial_jax import binomial_lookup_vec, mix32
+from repro.core.binomial_jax import binomial_lookup_dyn, binomial_lookup_vec, mix32
 from repro.models.layers.common import dense_init, init_mlp, apply_mlp
-from repro.sharding.rules import current_mesh, expert_layout, logical, shard
+from repro.sharding.rules import current_mesh, expert_layout, logical, shard, shard_map_compat
 
 GOLDEN32 = np.uint32(0x9E3779B9)
 
@@ -74,7 +74,15 @@ def route(p, x, token_ids, layer_salt, cfg: ArchConfig):
         for k in range(K):
             salt = (salt0 + np.uint32(k * 7919 + 1)) * GOLDEN32
             kk = mix32(keys ^ salt)
-            ids.append(binomial_lookup_vec(kk, E, omega=m.router_hash_omega))
+            if m.router_dynamic_n:
+                # expert count as a traced operand of the router lookup: when
+                # route() runs eagerly (routing sweeps, placement studies) one
+                # compiled trace serves every E. Inside a jitted model step E
+                # is a static config constant, so this cannot prevent the
+                # enclosing step from retracing on resize.
+                ids.append(binomial_lookup_dyn(kk, jnp.uint32(E), omega=m.router_hash_omega))
+            else:
+                ids.append(binomial_lookup_vec(kk, E, omega=m.router_hash_omega))
         expert_ids = jnp.stack(ids, axis=-1)
         gates = jnp.full(expert_ids.shape, 1.0 / K, jnp.float32)
         return expert_ids, gates, jnp.float32(0.0)
@@ -280,7 +288,7 @@ def apply_moe(p, x, token_ids, layer_salt, cfg: ArchConfig):
                 return jax.lax.psum(y, "model").reshape(xs.shape)
 
             dspec = P(dp_axes, None, None)
-            y = jax.shard_map(
+            y = shard_map_compat(
                 body,
                 mesh=mesh,
                 in_specs=(dspec, dspec, dspec, fsdp_w, fsdp_w, fsdp_wo),

@@ -57,14 +57,46 @@ class FailureDomain:
 
     Used by the serving router and the checkpoint manager: lookups always
     return an alive node; failures/recoveries move only the affected keys.
+
+    ``chain_bits=32`` (with a u32 engine such as ``binomial32``) makes the
+    whole lookup+remap path u32 — the word size of the batched device
+    datapath (``repro.serving.batch_router.BatchRouter``), which mirrors
+    this domain's state on device bit-exactly.
     """
 
-    def __init__(self, n: int, engine: str = "binomial"):
-        self._eng = MementoWrapper(lambda m: make(engine, m), n)
+    def __init__(
+        self,
+        n: int,
+        engine: str = "binomial",
+        chain_bits: int = 64,
+        omega: int | None = None,
+        max_chain: int = 4096,
+    ):
+        def factory(m: int):
+            eng = make(engine, m)
+            if omega is not None:
+                if not hasattr(eng, "omega"):
+                    raise ValueError(f"engine '{engine}' does not take omega")
+                eng.omega = omega
+            return eng
+
+        self._eng = MementoWrapper(factory, n, max_chain=max_chain, chain_bits=chain_bits)
 
     @property
     def alive_count(self) -> int:
         return self._eng.size
+
+    @property
+    def total_count(self) -> int:
+        """Total slot space of the base engine (alive + removed)."""
+        return self._eng.n_total
+
+    @property
+    def removed(self) -> frozenset[int]:
+        return frozenset(self._eng.removed)
+
+    def first_alive(self) -> int:
+        return self._eng.first_alive()
 
     def locate(self, key: int) -> int:
         return self._eng.get_bucket(key)

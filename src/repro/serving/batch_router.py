@@ -1,0 +1,157 @@
+"""Batched, recompile-free session routing — the serving-tier datapath.
+
+``SessionRouter`` routes one session at a time through scalar Python
+(``FailureDomain.locate``); fine for a control plane, hopeless for a serving
+tier taking millions of lookups per second.  ``BatchRouter`` embeds a u32
+``SessionRouter`` (binomial32 base engine + u32 Memento chain) as its
+control plane — scalar lookups, stats and fleet-event bookkeeping all live
+there — and routes whole key batches on device:
+
+    keys[N] --binomial_bulk_lookup_dyn--> buckets[N] --memento_remap--> replicas[N]
+
+Both device stages take the fleet state as *traced* operands — the cluster
+size ``n_total`` as a scalar-prefetch/SMEM scalar, the removed-slot table as
+a fixed-``capacity`` bool array — so an arbitrary stream of scale-up /
+scale-down / fail / recover events re-uses one compiled executable per batch
+shape: zero retraces, which is exactly the paper's constant-time guarantee
+carried through to the compiled datapath.
+
+Bit-exactness (enforced by tests): for every key, the device path returns
+exactly what the embedded scalar router's ``domain.locate`` returns — the
+scalar router is the oracle for the batched one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bits
+from repro.core.memento_jax import memento_remap
+from repro.kernels.ops import binomial_bulk_lookup_dyn
+from repro.serving.router import SessionRouter
+
+
+class BatchRouter:
+    """Route request batches through the dynamic-n kernel + device remap."""
+
+    def __init__(
+        self,
+        n_replicas: int,
+        capacity: int | None = None,
+        omega: int = 16,
+        max_chain: int = 4096,
+        use_pallas: bool | None = None,
+        interpret: bool = False,
+        block_rows: int = 512,
+    ):
+        if capacity is None:
+            capacity = max(64, bits.next_pow2(2 * n_replicas))
+        if n_replicas > capacity:
+            raise ValueError(f"n_replicas ({n_replicas}) exceeds capacity ({capacity})")
+        # control-plane truth: u32 engine + u32 chain (the device word size);
+        # omega/max_chain mirror the device operands so scalar == batch holds
+        # for non-default values too
+        self.scalar = SessionRouter(
+            n_replicas, engine="binomial32", chain_bits=32, omega=omega, max_chain=max_chain
+        )
+        self.capacity = capacity
+        self.omega = omega
+        self.max_chain = max_chain
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.block_rows = block_rows
+        self._mask: np.ndarray | None = None  # cached (capacity,) removed table
+
+    @property
+    def domain(self):
+        return self.scalar.domain
+
+    @property
+    def stats(self):
+        return self.scalar.stats
+
+    # -- device-side fleet state -------------------------------------------
+    def _device_state(self):
+        if self._mask is None:
+            mask = np.zeros((self.capacity,), dtype=bool)
+            removed = list(self.domain.removed)
+            if removed:
+                mask[removed] = True
+            self._mask = mask
+        return (
+            self._mask,
+            np.uint32(self.domain.total_count),
+            np.uint32(self.domain.first_alive()),
+        )
+
+    def _invalidate(self):
+        self._mask = None
+
+    # -- routing ------------------------------------------------------------
+    session_key = staticmethod(SessionRouter.session_key)
+
+    def route_keys(self, keys) -> np.ndarray:
+        """Pre-hashed keys (any int array) -> int32 replica ids, on device.
+
+        Keys are truncated to u32 — identical to what the scalar u32 oracle
+        (``binomial_lookup32`` / the u32 Memento chain) does with wide keys.
+        The raw-key hot path skips per-session movement bookkeeping; use
+        ``route_batch`` for session-level observability.
+        """
+        keys_u32 = np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
+        mask, n_total, first_alive = self._device_state()
+        buckets = binomial_bulk_lookup_dyn(
+            keys_u32,
+            n_total,
+            omega=self.omega,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+            block_rows=self.block_rows,
+        )
+        out = memento_remap(
+            keys_u32, buckets, mask, n_total, first_alive, max_chain=self.max_chain
+        )
+        self.stats.lookups += int(keys_u32.size)
+        return np.asarray(out)
+
+    def route_batch(self, session_ids) -> np.ndarray:
+        """Session ids (str/int) -> int32 replica ids, one device round-trip.
+
+        Session-id hashing and movement bookkeeping are O(N) host Python —
+        fine at request-batch sizes.  For the raw throughput path (millions
+        of pre-hashed keys) call ``route_keys`` directly; that is what
+        ``benchmarks/bench_router.py`` measures.
+        """
+        keys = [self.session_key(s) for s in session_ids]
+        out = self.route_keys(np.array(keys, dtype=np.uint64))
+        self.scalar.note_routes(keys, out)
+        return out
+
+    def route(self, session_id) -> int:
+        """Scalar lookup through the control plane (bit-exact with the batch)."""
+        return self.scalar.route(session_id)
+
+    # -- fleet events --------------------------------------------------------
+    def scale_up(self) -> int:
+        if self.domain.total_count >= self.capacity:
+            raise ValueError(
+                f"fleet at device-table capacity ({self.capacity}); "
+                "construct BatchRouter with a larger capacity"
+            )
+        self._invalidate()
+        return self.scalar.scale_up()
+
+    def scale_down(self) -> int:
+        self._invalidate()
+        return self.scalar.scale_down()
+
+    def fail(self, replica: int) -> None:
+        self._invalidate()
+        self.scalar.fail(replica)
+
+    def recover(self, replica: int) -> None:
+        self._invalidate()
+        self.scalar.recover(replica)
+
+    @property
+    def alive(self) -> int:
+        return self.scalar.alive

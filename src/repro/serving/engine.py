@@ -2,9 +2,11 @@
 
 Each ``Replica`` owns model params and serves aligned batches: prefill the
 batch of prompts, then decode step-by-step (greedy).  The ``ServingTier``
-composes replicas with the BinomialHash ``SessionRouter``: requests are
+composes replicas with the BinomialHash ``BatchRouter``: the whole request
+batch is routed in one device round-trip (dynamic-n kernel + Memento remap),
 grouped by routed replica, each replica serves its group, and fleet events
-(fail/scale) only disturb the sessions the paper's guarantees say they may.
+(fail/scale) only disturb the sessions the paper's guarantees say they may —
+and never recompile the routing datapath.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
-from repro.serving.router import SessionRouter
+from repro.serving.batch_router import BatchRouter
 
 
 class Replica:
@@ -50,14 +52,15 @@ class Request:
 
 class ServingTier:
     def __init__(self, cfg: ArchConfig, params, n_replicas: int, max_len: int = 64):
-        self.router = SessionRouter(n_replicas)
+        self.router = BatchRouter(n_replicas)
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
 
     def serve(self, requests: list[Request]) -> dict[str, np.ndarray]:
-        """Route by session, group per replica, serve aligned batches."""
+        """Route the whole batch in one device pass, group, serve aligned."""
+        replicas = self.router.route_batch([r.session_id for r in requests])
         groups: dict[int, list[Request]] = {}
-        for r in requests:
-            groups.setdefault(self.router.route(r.session_id), []).append(r)
+        for r, rep_id in zip(requests, replicas):
+            groups.setdefault(int(rep_id), []).append(r)
         results: dict[str, np.ndarray] = {}
         for rep_id, group in groups.items():
             rep = self.replicas[rep_id]

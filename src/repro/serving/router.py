@@ -6,6 +6,22 @@ replica across requests — KV-cache / prefix-cache affinity — and (c) scaling
 the replica fleet up/down or losing a replica moves only the minimal set of
 sessions (whose prefixes must be re-prefetched; everyone else's cache stays
 hot).
+
+Two tiers share this architecture:
+
+* ``SessionRouter`` (this module) — the scalar control plane: one Python
+  lookup per call through ``FailureDomain.locate``.  With
+  ``engine="binomial32", chain_bits=32`` it is the bit-exact oracle for the
+  batched datapath.
+* ``BatchRouter`` (``repro.serving.batch_router``) — the device datapath:
+  whole request batches flow through the dynamic-n Pallas kernel
+  (``binomial_bulk_lookup_dyn``, cluster size as a scalar-prefetch operand)
+  and the vectorised Memento failure remap (``memento_remap``, removed-slot
+  table as a fixed-capacity device array).  Fleet events mutate only small
+  traced operands, so scale/fail streams never retrace or recompile.
+
+``ServingTier`` routes with the batched tier and falls back to the scalar
+path for single lookups; both agree key-for-key by construction.
 """
 from __future__ import annotations
 
@@ -23,8 +39,17 @@ class RoutingStats:
 
 
 class SessionRouter:
-    def __init__(self, n_replicas: int, engine: str = "binomial"):
-        self.domain = FailureDomain(n_replicas, engine)
+    def __init__(
+        self,
+        n_replicas: int,
+        engine: str = "binomial",
+        chain_bits: int = 64,
+        omega: int | None = None,
+        max_chain: int = 4096,
+    ):
+        self.domain = FailureDomain(
+            n_replicas, engine, chain_bits=chain_bits, omega=omega, max_chain=max_chain
+        )
         self.stats = RoutingStats()
         self._last: dict[int, int] = {}  # session -> replica (observability only)
 
@@ -41,11 +66,32 @@ class SessionRouter:
         key = self.session_key(session_id)
         replica = self.domain.locate(key)
         self.stats.lookups += 1
-        prev = self._last.get(key)
-        if prev is not None and prev != replica:
-            self.stats.moved_sessions += 1
-        self._last[key] = replica
+        self.note_routes((key,), (replica,))
         return replica
+
+    #: cap on the observability map: beyond this many distinct sessions, NEW
+    #: sessions are no longer movement-tracked (routing itself is stateless
+    #: and unaffected) — bounds resident memory over long serving lifetimes
+    LAST_MAX = 1 << 20
+
+    def note_routes(self, keys, replicas) -> None:
+        """Bulk observability update: record key -> replica, count movers.
+
+        Used by the batched datapath (``BatchRouter.route_batch``) so the
+        ``moved_sessions`` metric keeps working when routing bypasses the
+        scalar ``route``.
+        """
+        last = self._last
+        for key, replica in zip(keys, replicas):
+            replica = int(replica)
+            prev = last.get(key)
+            if prev is None:
+                if len(last) < self.LAST_MAX:
+                    last[key] = replica
+                continue
+            if prev != replica:
+                self.stats.moved_sessions += 1
+                last[key] = replica
 
     # -- fleet events -----------------------------------------------------------
     def scale_up(self) -> int:

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import binomial_lookup32, binomial_lookup64
