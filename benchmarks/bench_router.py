@@ -1,22 +1,38 @@
-"""Routing throughput: scalar SessionRouter vs batched BatchRouter.
+"""Routing throughput: scalar SessionRouter vs the batched device datapaths.
 
-Measures lookups/sec for (a) a steady batch stream and (b) a stream
+Three tiers, measured on (a) a steady batch stream and (b) a stream
 interleaved with scale/fail fleet events — the case the recompile-free
-dynamic-n datapath exists for.  CSV lands in benchmarks/out/router.csv.
+dynamic-n datapath exists for:
+
+* ``scalar``   — one Python lookup at a time (``FailureDomain.locate``);
+* ``two_pass`` — pre-fusion pipeline: dynamic-n bulk lookup, ``buckets[N]``
+  through HBM, then the Memento remap (two dispatches per batch);
+* ``fused``    — the single-dispatch fused lookup+remap kernel over
+  device-resident fleet state (``BatchRouter`` default).
+
+Outputs: ``name,us_per_call,derived`` lines for run.py, a CSV in
+benchmarks/out/ (gitignored), and the machine-readable ``BENCH_router.json``
+at the repo root — keys/sec and µs/batch per tier, tracked PR over PR.
+``--smoke`` shrinks sizes for the CI smoke step (exercises the full fused
+datapath incl. fleet events, in seconds).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, rows_to_csv
+from benchmarks.common import emit, rows_to_csv, write_bench_json
 from repro.serving.batch_router import BatchRouter
 from repro.serving.router import SessionRouter
 
 N_REPLICAS = 16
-BATCH = 1 << 16
+BATCH = 1 << 20  # >= 1M keys: the acceptance size for fused vs two-pass
 SCALAR_KEYS = 2000
+EVENTS = [("fail", 3), ("scale_up", None), ("recover", 3), ("scale_down", None)] * 2
 
 
 def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
@@ -26,49 +42,120 @@ def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
     return len(keys) / (time.perf_counter() - t0)
 
 
-def _batch_rate(router: BatchRouter, keys: np.ndarray, iters: int = 5) -> float:
-    router.route_keys(keys)  # compile
+def _batch_stats(router: BatchRouter, keys, iters: int) -> dict:
+    jax.block_until_ready(router.route_keys(keys))  # compile
     t0 = time.perf_counter()
+    out = None
     for _ in range(iters):
-        router.route_keys(keys)
-    return iters * len(keys) / (time.perf_counter() - t0)
+        out = router.route_keys(keys)
+    jax.block_until_ready(out)
+    per_batch = (time.perf_counter() - t0) / iters
+    return {
+        "us_per_batch": per_batch * 1e6,
+        "keys_per_sec": np.size(keys) / per_batch,
+    }
 
 
-def main() -> None:
+def _event_storm_stats(router: BatchRouter, keys) -> dict:
+    jax.block_until_ready(router.route_keys(keys))  # compile
+    t0 = time.perf_counter()
+    out = None
+    for ev, arg in EVENTS:
+        getattr(router, ev)(*(() if arg is None else (arg,)))
+        out = router.route_keys(keys)
+    jax.block_until_ready(out)
+    per_batch = (time.perf_counter() - t0) / len(EVENTS)
+    return {
+        "us_per_batch": per_batch * 1e6,
+        "keys_per_sec": np.size(keys) / per_batch,
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small sizes for CI: full datapath exercised, seconds not minutes",
+    )
+    # run.py calls main() programmatically — don't inherit its sys.argv
+    args = ap.parse_args([] if argv is None else argv)
+    batch = 1 << 14 if args.smoke else BATCH
+    iters = 3 if args.smoke else 10
+    scalar_keys = 200 if args.smoke else SCALAR_KEYS
+
     rng = np.random.default_rng(0)
-    keys = rng.integers(0, 2**64, size=(BATCH,), dtype=np.uint64)
-    skeys = keys[:SCALAR_KEYS]
+    keys_np = rng.integers(0, 2**64, size=(batch,), dtype=np.uint64)
+    # device-resident u32 keys: what a serving tier actually holds in steady
+    # state — route_keys takes and returns jax.Array with no host round-trip
+    keys = jnp.asarray(keys_np.astype(np.uint32))
+    skeys = keys_np[:scalar_keys]
 
     scalar = SessionRouter(N_REPLICAS, engine="binomial32", chain_bits=32)
-    batch = BatchRouter(N_REPLICAS)
+    fused = BatchRouter(N_REPLICAS)
+    two_pass = BatchRouter(N_REPLICAS, fused=False)
 
-    rows = []
-    s_rate = _scalar_rate(scalar, skeys)
-    b_rate = _batch_rate(batch, keys)
-    rows.append(["steady", f"{s_rate:.0f}", f"{b_rate:.0f}", f"{b_rate / s_rate:.1f}"])
-    emit("router_scalar_steady", 1e6 / s_rate, f"{s_rate:.0f} lookups/s")
-    emit("router_batch_steady", 1e6 / b_rate, f"{b_rate:.0f} lookups/s ({b_rate/s_rate:.0f}x)")
+    steady = {
+        "scalar": {"keys_per_sec": _scalar_rate(scalar, skeys)},
+        "fused": _batch_stats(fused, keys, iters),
+        "two_pass": _batch_stats(two_pass, keys, iters),
+    }
 
-    # event storm: one fleet event per batch — the dynamic-n path must not
-    # recompile, the scalar path re-walks its chains either way
-    events = [("fail", 3), ("scale_up", None), ("recover", 3), ("scale_down", None)] * 2
+    # event storm: one fleet event per batch — the recompile-free path must
+    # absorb them; the scalar path re-walks its chains either way
     t0 = time.perf_counter()
-    for ev, arg in events:
-        getattr(batch, ev)(*(() if arg is None else (arg,)))
-        batch.route_keys(keys)
-    b_ev = len(events) * BATCH / (time.perf_counter() - t0)
-    t0 = time.perf_counter()
-    for ev, arg in events:
+    for ev, arg in EVENTS:
         getattr(scalar, ev)(*(() if arg is None else (arg,)))
         for k in skeys:
             scalar.domain.locate(int(k))
-    s_ev = len(events) * SCALAR_KEYS / (time.perf_counter() - t0)
-    rows.append(["event_storm", f"{s_ev:.0f}", f"{b_ev:.0f}", f"{b_ev / s_ev:.1f}"])
-    emit("router_scalar_events", 1e6 / s_ev, f"{s_ev:.0f} lookups/s")
-    emit("router_batch_events", 1e6 / b_ev, f"{b_ev:.0f} lookups/s ({b_ev/s_ev:.0f}x)")
+    s_ev_rate = len(EVENTS) * scalar_keys / (time.perf_counter() - t0)
+    storm = {
+        "scalar": {"keys_per_sec": s_ev_rate},
+        "fused": _event_storm_stats(fused, keys),
+        "two_pass": _event_storm_stats(two_pass, keys),
+    }
 
-    rows_to_csv("router", ["stream", "scalar_lps", "batch_lps", "speedup"], rows)
+    payload = {
+        "bench": "router",
+        "backend": jax.default_backend(),
+        "n_replicas": N_REPLICAS,
+        "batch_keys": batch,
+        "smoke": args.smoke,
+        "steady": steady,
+        "event_storm": storm,
+        "speedup": {
+            "fused_over_two_pass_steady": steady["two_pass"]["us_per_batch"]
+            / steady["fused"]["us_per_batch"],
+            "fused_over_two_pass_storm": storm["two_pass"]["us_per_batch"]
+            / storm["fused"]["us_per_batch"],
+            "fused_over_scalar_steady": steady["fused"]["keys_per_sec"]
+            / steady["scalar"]["keys_per_sec"],
+        },
+    }
+    # smoke runs land in gitignored benchmarks/out/ so they never clobber
+    # the tracked full-size (1M-key) record at the repo root
+    path = write_bench_json("router", payload, tracked=not args.smoke)
+    print(f"# wrote {path}")
+
+    rows = []
+    for stream, tiers in (("steady", steady), ("event_storm", storm)):
+        for tier in ("scalar", "two_pass", "fused"):
+            stats = tiers[tier]
+            rate = stats["keys_per_sec"]
+            # scalar tier has no real batch; report the batch-equivalent time
+            us = stats.get("us_per_batch", 1e6 * batch / rate)
+            rows.append([stream, tier, f"{rate:.0f}", f"{us:.1f}"])
+            emit(f"router_{tier}_{stream}", 1e6 / rate, f"{rate:.0f} lookups/s")
+    emit(
+        "router_fused_batch_steady",
+        steady["fused"]["us_per_batch"],
+        f"{payload['speedup']['fused_over_two_pass_steady']:.2f}x vs two-pass, "
+        f"{payload['speedup']['fused_over_scalar_steady']:.0f}x vs scalar",
+    )
+    rows_to_csv("router", ["stream", "tier", "keys_per_sec", "us_per_batch"], rows)
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -2,11 +2,13 @@
 from __future__ import annotations
 
 import csv
+import json
 import os
 import random
 import time
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def rows_to_csv(name: str, header: list[str], rows: list[list]) -> str:
@@ -22,6 +24,23 @@ def rows_to_csv(name: str, header: list[str], rows: list[list]) -> str:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The run.py contract: ``name,us_per_call,derived`` lines."""
     print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict, tracked: bool = True) -> str:
+    """Write ``BENCH_<name>.json`` — machine-readable perf record.
+
+    ``tracked=True`` writes at the REPO ROOT, kept under version control so
+    the perf trajectory is tracked PR over PR.  ``tracked=False`` (smoke /
+    reduced-size runs) writes into the gitignored benchmarks/out/ instead,
+    so a CI or verify smoke run never clobbers the tracked full-size record.
+    """
+    root = REPO_ROOT if tracked else OUT_DIR
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def time_loop(fn, iters: int, warmup: int = 3) -> float:

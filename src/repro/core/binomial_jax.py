@@ -43,6 +43,16 @@ def hash_pair(h: jax.Array, f: jax.Array) -> jax.Array:
     return mix32(h.astype(jnp.uint32) ^ mix32(f.astype(jnp.uint32) + GOLDEN32))
 
 
+def _or_cascade(m: jax.Array) -> jax.Array:
+    """Smear the highest set bit downward: m -> 2^(floor(log2 m)+1) - 1."""
+    m = m | (m >> 1)
+    m = m | (m >> 2)
+    m = m | (m >> 4)
+    m = m | (m >> 8)
+    m = m | (m >> 16)
+    return m
+
+
 def next_pow2_u32(n: jax.Array) -> jax.Array:
     """Smallest power of two >= n, elementwise on uint32 (shift-or cascade).
 
@@ -50,13 +60,24 @@ def next_pow2_u32(n: jax.Array) -> jax.Array:
     kernel body, so the dynamic-n kernel and ``binomial_lookup_dyn`` share
     one E/M derivation (the bit that must stay identical for kernel == ref).
     """
-    m = jnp.asarray(n, jnp.uint32) - np.uint32(1)
-    m = m | (m >> 1)
-    m = m | (m >> 2)
-    m = m | (m >> 4)
-    m = m | (m >> 8)
-    m = m | (m >> 16)
-    return m + np.uint32(1)
+    return _or_cascade(jnp.asarray(n, jnp.uint32) - np.uint32(1)) + np.uint32(1)
+
+
+def umod32(x: jax.Array, n: jax.Array) -> jax.Array:
+    """Bit-exact ``x % n`` for uint32 vectors and a scalar 1 <= n < 2**31.
+
+    Restoring long division — shift/compare/subtract only, no integer divide,
+    so it lowers on the TPU VPU (which has none).  Used by the fused routing
+    kernel's Memento chain step; the pure-jnp fallback uses native ``%`` (XLA
+    has integer remainder on CPU/GPU) and tests pin the two equal.
+    """
+    x = x.astype(jnp.uint32)
+    n = jnp.asarray(n, jnp.uint32)
+    r = jnp.zeros_like(x)
+    for k in range(31, -1, -1):
+        r = (r << 1) | ((x >> np.uint32(k)) & np.uint32(1))
+        r = jnp.where(r >= n, r - n, r)
+    return r
 
 
 def highest_one_bit_index(b: jax.Array) -> jax.Array:
@@ -75,18 +96,28 @@ def highest_one_bit_index(b: jax.Array) -> jax.Array:
 
 
 def relocate_within_level(b: jax.Array, h: jax.Array) -> jax.Array:
-    """Alg. 2 vectorised: uniform relocation of b within its tree level."""
+    """Alg. 2 vectorised: uniform relocation of b within its tree level.
+
+    The level extent is read straight off the shift-or cascade —
+    ``cascade(b) = 2^(d+1)-1`` so ``f = cascade >> 1 = 2^d-1`` and
+    ``top = f+1 = 2^d`` — skipping the popcount multiply and variable shift
+    of ``highest_one_bit_index`` (same values, fewer VPU ops per call, and
+    this is called ω+1 times per lookup).
+    """
     b = b.astype(jnp.uint32)
-    d = highest_one_bit_index(jnp.maximum(b, np.uint32(1)))
-    top = np.uint32(1) << d
-    f = top - np.uint32(1)
+    f = _or_cascade(jnp.maximum(b, np.uint32(1))) >> 1
+    top = f + np.uint32(1)
     i = hash_pair(h, f) & f
     return jnp.where(b < 2, b, top + i)
 
 
 def _unrolled_body(keys_u32: jax.Array, E: jax.Array, M: jax.Array, n_u32: jax.Array, omega: int):
     """Shared ω-unrolled core. E/M/n may be python ints or traced scalars."""
-    h0 = hash_iter(keys_u32, 0)
+    # hash_iter(key, i) == mix32(key + i*GOLDEN32): hoist the per-iteration
+    # index multiply into a running accumulator (one u32 add per iteration,
+    # exact in mod-2^32 arithmetic).
+    kacc = keys_u32.astype(jnp.uint32)
+    h0 = mix32(kacc)
     # Blocks A and C share the same expression over the ORIGINAL hash h0:
     # relocate(h0 & (M-1), h0) — compute once.
     fold = relocate_within_level(h0 & (M - np.uint32(1)), h0)
@@ -103,7 +134,8 @@ def _unrolled_body(keys_u32: jax.Array, E: jax.Array, M: jax.Array, n_u32: jax.A
         result = jnp.where(newly, val, result)
         found = found | in_a | in_b
         if i + 1 < omega:
-            hi = hash_iter(keys_u32, i + 1)
+            kacc = kacc + GOLDEN32
+            hi = mix32(kacc)
     # Block C for lanes that never accepted.
     return jnp.where(found, result, fold)
 

@@ -30,7 +30,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.binomial_jax import hash_iter, hash_pair
+from repro.core.binomial_jax import (
+    _unrolled_body,
+    hash_iter,
+    hash_pair,
+    next_pow2_u32,
+)
+
+#: lanes the packed removed-mask is padded to — one native TPU VREG row, so
+#: the fused kernel can take it as a whole-block VMEM operand without layout
+#: surprises (capacity/32 words of real payload, zero-padded to a multiple).
+MASK_LANES = 128
+
+
+def mask_words(capacity: int) -> int:
+    """Number of u32 bit-words holding a ``capacity``-slot removed mask."""
+    return max(1, -(-capacity // 32))
+
+
+def pack_removed_mask(removed, capacity: int, lanes: int = MASK_LANES) -> np.ndarray:
+    """Removed-slot ids -> ``(1, W)`` uint32 bit-words (bit b = slot b removed).
+
+    ``W`` is ``mask_words(capacity)`` rounded up to a multiple of ``lanes``;
+    the padding words are zero (never-removed).  This is the host-side mirror
+    of the fused kernel's VMEM mask operand: O(capacity/32) words, shape
+    fixed across arbitrary fleet-event streams.
+    """
+    words = -(-mask_words(capacity) // lanes) * lanes
+    packed = np.zeros((1, words), dtype=np.uint32)
+    for b in removed:
+        if not 0 <= b < capacity:
+            raise ValueError(f"removed slot {b} outside capacity {capacity}")
+        packed[0, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+    return packed
 
 
 @functools.partial(jax.jit, static_argnames=("max_chain",))
@@ -71,3 +103,110 @@ def memento_remap(
     # mirroring MementoWrapper.first_alive().
     b = jnp.where(active, jnp.asarray(first_alive, jnp.uint32), b)
     return b.astype(jnp.int32).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fused lookup + remap: the whole routing decision under ONE jit dispatch.
+# ---------------------------------------------------------------------------
+
+
+def _route_fused_impl(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    omega: int,
+    max_chain: int,
+) -> jax.Array:
+    """Traceable body shared by ``binomial_memento_route`` (jit'd, CPU/GPU
+    fallback) and ``kernels.ref.binomial_route_ref`` (unjitted oracle).
+
+    keys         any int shape S (uint32 key space)
+    packed_mask  (1, W) uint32 bit-words — bit b set iff slot b removed
+    state        (2,) uint32 — [n_total, first_alive]
+    """
+    shape = keys.shape
+    keys_u32 = keys.reshape(-1).astype(jnp.uint32)
+    total = state[0].astype(jnp.uint32)
+    first_alive = state[1].astype(jnp.uint32)
+    E = next_pow2_u32(total)
+    M = E >> 1
+    b = _unrolled_body(keys_u32, E, M, total, omega)
+    b = jnp.where(total <= np.uint32(1), np.uint32(0), b)
+
+    # Expand the packed words into a (capacity,) bool LUT once per call —
+    # membership then costs ONE gather per lane per round instead of
+    # gather+shift+mask arithmetic.  (The Pallas kernel keeps the packed
+    # select-cascade: no vector gather on the VPU.)
+    words = packed_mask.reshape(-1)
+    slot = jnp.arange(words.shape[0] * 32, dtype=jnp.uint32)
+    removed_lut = ((words[slot >> 5] >> (slot & np.uint32(31))) & np.uint32(1)) != 0
+
+    def removed(bv):
+        return removed_lut[bv]
+
+    # Loop shape is performance-critical on XLA:CPU, in three non-obvious
+    # ways (measured on 1M-key batches; the Pallas kernel keeps the classic
+    # test-first loop because its carry lives in registers/VMEM, not HBM):
+    # * the ω-unrolled producer of ``b`` must have exactly ONE consumer — the
+    #   carry init.  Testing membership outside the loop (``removed(b)``)
+    #   hands the fusion pass a second elementwise consumer and it happily
+    #   recomputes all ~850 ops of the producer into it (2x batch latency;
+    #   optimization_barrier gets stripped).  So the membership test lives
+    #   INSIDE the body, on the materialised carry, and ``active`` starts
+    #   all-True — one extra (cheap) round on a healthy fleet.
+    # * that extra round must not pay for hashing: the chain step is wrapped
+    #   in ``lax.cond`` so a round with no active lanes skips it entirely.
+    # * the chain recomputes hash_iter(keys, i+1) from the closed-over keys
+    #   instead of carrying a hash accumulator — an extra while-loop carry is
+    #   a whole keys-sized buffer XLA:CPU copies in and out even for zero
+    #   rounds.
+    def cond(state_):
+        i, _, act = state_
+        return (i < np.uint32(max_chain)) & jnp.any(act)
+
+    def body(state_):
+        i, bb, act = state_
+        act = act & removed(bb)
+
+        def step(bb):
+            nb = hash_pair(hash_iter(keys_u32, i + np.uint32(1)), bb) % total
+            return jnp.where(act, nb, bb)
+
+        bb = jax.lax.cond(jnp.any(act), step, lambda bb: bb, bb)
+        return i + np.uint32(1), bb, act
+
+    def chain(b):
+        _, b, active = jax.lax.while_loop(
+            cond, body, (jnp.uint32(0), b, jnp.ones(b.shape, dtype=bool))
+        )
+        # ``active`` lags one membership test behind ``b`` (and is all-True
+        # when max_chain == 0): re-test the final buckets for exhaustion.
+        return jnp.where(active & removed(b), first_alive, b)
+
+    # Healthy-fleet fast path: with zero removed slots — the steady state —
+    # a scalar reduction over the TINY packed mask skips the whole chain, so
+    # the fused cost degenerates to the base lookup alone.
+    b = jax.lax.cond(jnp.any(words != 0), chain, lambda b: b, b)
+    return b.astype(jnp.int32).reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "max_chain"))
+def binomial_memento_route(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    omega: int = 16,
+    max_chain: int = 4096,
+) -> jax.Array:
+    """Fused BinomialHash lookup + Memento remap — one device dispatch.
+
+    The pure-jnp mirror of the fused Pallas kernel
+    (``repro.kernels.binomial_hash.binomial_route_fused_2d``): the ω-unrolled
+    base lookup feeds the rejection chain in-trace, so no intermediate
+    ``buckets[N]`` array ever round-trips through HBM and a
+    ``BatchRouter.route_keys`` call costs exactly one dispatch.  All fleet
+    state is traced (``packed_mask`` fixed-shape, ``state`` a 2-vector), so
+    scale/fail/recover streams never retrace.  Bit-exact against the scalar
+    ``SessionRouter(binomial32, chain_bits=32)`` oracle (tests enforce).
+    """
+    return _route_fused_impl(keys, packed_mask, state, omega, max_chain)

@@ -23,12 +23,20 @@ Two flavours of the same kernel body:
   ``binomial_bulk_lookup_pallas_dyn``) — ``n`` rides in as a scalar-prefetch
   operand (``pltpu.PrefetchScalarGridSpec``, landing in SMEM before the grid
   body runs); ``E``/``M`` are derived in-kernel with the shift-or cascade, so
-  elastic scale-up/down and replica failures NEVER retrace.  This is the
-  serving datapath: ``repro.serving.batch_router.BatchRouter`` routes whole
-  request batches through this kernel, then applies the device-side
-  Memento-style failure remap (``repro.core.memento_jax``) to divert keys off
-  dead replicas — lookup + remap both on device, zero recompiles across
-  arbitrary scale/fail event streams.
+  elastic scale-up/down and replica failures NEVER retrace.
+
+Plus the serving hot path built on the dynamic flavour:
+
+* **fused** (``binomial_route_fused_2d`` / ``binomial_route_pallas_fused``) —
+  the dynamic-n lookup *and* the bounded Memento rejection chain in one
+  kernel (DESIGN.md §3).  ``[n_total, first_alive]`` is the scalar-prefetch
+  SMEM operand, the packed removed-slot mask a whole-block VMEM operand, and
+  final replica ids are written in a single pass: no intermediate
+  ``buckets[N]`` HBM round-trip and ONE device dispatch per batch.
+  ``repro.serving.batch_router.BatchRouter`` routes whole request batches
+  through this kernel with device-resident fleet state — zero recompiles and
+  zero per-batch host->device state uploads across arbitrary scale/fail
+  event streams.
 """
 from __future__ import annotations
 
@@ -40,7 +48,14 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.binomial_jax import _unrolled_body, next_pow2_u32
+from repro.core.binomial_jax import (
+    GOLDEN32,
+    _unrolled_body,
+    hash_pair,
+    mix32,
+    next_pow2_u32,
+    umod32,
+)
 
 LANES = 128  # TPU minor-dim tile
 
@@ -172,5 +187,148 @@ def binomial_bulk_lookup_pallas_dyn(
         flat = jnp.pad(flat, (0, padded - total))
     out = binomial_bulk_lookup_dyn_2d(
         flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(-1)[:total].reshape(keys.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused flavour: BinomialHash lookup + Memento rejection chain in ONE kernel.
+# The serving hot path — no intermediate buckets[N] HBM round-trip, one
+# dispatch per batch.  Fleet state rides as traced operands:
+#   * [n_total, first_alive] — scalar-prefetch (SMEM before the grid runs);
+#   * packed removed mask    — (1, W) u32 bit-words, whole-block VMEM operand
+#     re-used by every grid step (W = capacity/32 words, lane-padded).
+# The chain reads the mask with a select cascade over the W words (static
+# count) instead of a per-lane gather — VPU-friendly — and its `% n_total`
+# uses divide-free restoring division (`umod32`; the VPU has no integer
+# divide).  With no removed slots the while loop exits before one round, so
+# the healthy-fleet cost is the base lookup alone.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_fused(
+    state_ref, mask_ref, keys_ref, out_ref, *, omega: int, max_chain: int, n_words: int
+):
+    n = state_ref[0].astype(jnp.uint32)
+    first_alive = state_ref[1].astype(jnp.uint32)
+    E = next_pow2_u32(n)
+    M = E >> 1
+    keys = keys_ref[...].astype(jnp.uint32)
+    b = _unrolled_body(keys, E, M, n, omega)
+    b = jnp.where(n <= np.uint32(1), np.uint32(0), b)
+
+    def removed(bv):
+        # select-cascade membership test over the packed bit-words: W scalar
+        # broadcasts + selects per round, no vector gather needed.
+        w = bv >> np.uint32(5)
+        word = jnp.zeros_like(bv)
+        for s in range(n_words):
+            word = jnp.where(w == np.uint32(s), mask_ref[0, s], word)
+        return ((word >> (bv & np.uint32(31))) & np.uint32(1)) != 0
+
+    active = removed(b)
+
+    def cond(carry):
+        i, _, _, act = carry
+        return (i < np.uint32(max_chain)) & jnp.any(act)
+
+    def body(carry):
+        i, kacc, bb, act = carry
+        # hash_iter(key, i+1) via the running accumulator: one add + mix32.
+        kacc = kacc + GOLDEN32
+        nb = umod32(hash_pair(mix32(kacc), bb), n)
+        bb = jnp.where(act, nb, bb)
+        return i + np.uint32(1), kacc, bb, act & removed(bb)
+
+    _, _, b, active = jax.lax.while_loop(
+        cond, body, (jnp.uint32(0), keys, b, active)
+    )
+    b = jnp.where(active, first_alive, b)
+    out_ref[...] = b.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_words", "omega", "max_chain", "block_rows", "interpret"),
+)
+def binomial_route_fused_2d(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    n_words: int,
+    omega: int = 16,
+    max_chain: int = 4096,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(rows, 128) u32 keys + fleet state -> (rows, 128) int32 replica ids.
+
+    One ``pallas_call`` — base lookup *and* failure remap.  ``state`` is the
+    (2,) u32 ``[n_total, first_alive]`` scalar-prefetch operand; ``packed_mask``
+    is the (1, W) u32 removed-slot bit-table (see
+    ``repro.core.memento_jax.pack_removed_mask``); ``n_words`` is the static
+    number of payload words (= capacity/32), bounding the select cascade.
+    Everything dynamic is traced, so fleet events never retrace.
+    """
+    rows, lanes = keys.shape
+    if lanes != LANES:
+        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
+    if rows % block_rows != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
+    if not 1 <= n_words <= packed_mask.shape[1]:
+        raise ValueError(
+            f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]"
+        )
+    grid = (rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # whole-block mask: same (1, W) block for every grid step
+            pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_fused, omega=omega, max_chain=max_chain, n_words=n_words
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(
+        jnp.asarray(state, jnp.uint32).reshape(2),
+        packed_mask.astype(jnp.uint32),
+        keys.astype(jnp.uint32),
+    )
+
+
+def binomial_route_pallas_fused(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    n_words: int,
+    omega: int = 16,
+    max_chain: int = 4096,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Any-shape int keys + fleet state -> int32 replica ids, fused kernel."""
+    flat = keys.reshape(-1).astype(jnp.uint32)
+    total = flat.shape[0]
+    tile = block_rows * LANES
+    padded = (total + tile - 1) // tile * tile
+    if padded != total:
+        flat = jnp.pad(flat, (0, padded - total))
+    out = binomial_route_fused_2d(
+        flat.reshape(-1, LANES),
+        packed_mask,
+        state,
+        n_words,
+        omega=omega,
+        max_chain=max_chain,
+        block_rows=block_rows,
+        interpret=interpret,
     )
     return out.reshape(-1)[:total].reshape(keys.shape)

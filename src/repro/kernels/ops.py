@@ -10,9 +10,11 @@ from __future__ import annotations
 import jax
 
 from repro.core.binomial_jax import binomial_lookup_dyn
+from repro.core.memento_jax import binomial_memento_route
 from repro.kernels.binomial_hash import (
     binomial_bulk_lookup_pallas,
     binomial_bulk_lookup_pallas_dyn,
+    binomial_route_pallas_fused,
 )
 from repro.kernels.ref import binomial_bulk_lookup_ref
 
@@ -61,3 +63,45 @@ def binomial_bulk_lookup_dyn(
             keys, n, omega=omega, block_rows=block_rows, interpret=interpret
         )
     return binomial_lookup_dyn(keys, n, omega=omega)
+
+
+def binomial_route_bulk(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    *,
+    n_words: int,
+    omega: int = 16,
+    max_chain: int = 4096,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_rows: int = 512,
+) -> jax.Array:
+    """Fused routing: keys + fleet state -> int32 replica ids, ONE dispatch.
+
+    The single-dispatch serving hot path: BinomialHash lookup and the bounded
+    Memento rejection chain run under one compiled executable (fused Pallas
+    kernel on TPU / interpret mode, fused jnp jit elsewhere) — no
+    intermediate ``buckets[N]`` HBM round-trip, and every fleet-state operand
+    is traced so scale/fail/recover streams never retrace.
+
+    packed_mask  (1, W) u32 removed-slot bit-words (``pack_removed_mask``)
+    state        (2,) u32 ``[n_total, first_alive]``
+    n_words      static payload word count (= ceil(capacity/32))
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return binomial_route_pallas_fused(
+            keys,
+            packed_mask,
+            state,
+            n_words,
+            omega=omega,
+            max_chain=max_chain,
+            block_rows=block_rows,
+            interpret=interpret,
+        )
+    return binomial_memento_route(
+        keys, packed_mask, state, omega=omega, max_chain=max_chain
+    )

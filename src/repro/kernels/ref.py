@@ -1,7 +1,10 @@
-"""Pure-jnp oracle for the bulk BinomialHash lookup kernel.
+"""Pure-jnp oracles for the bulk BinomialHash lookup / fused routing kernels.
 
-This is the reference the Pallas kernel is tested against (and itself
-bit-exact against the scalar u32 implementation in repro.core.binomial).
+These are the references the Pallas kernels are tested against (and
+themselves bit-exact against the scalar u32 implementations in
+``repro.core.binomial`` / ``repro.core.memento``).  Unjitted on purpose —
+tests call them eagerly; the production jit'd flavours live in
+``repro.core.binomial_jax`` and ``repro.core.memento_jax``.
 """
 from __future__ import annotations
 
@@ -10,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binomial_jax import _unrolled_body
+from repro.core.memento_jax import _route_fused_impl
 
 
 def binomial_bulk_lookup_ref(keys: jax.Array, n: int, omega: int = 16) -> jax.Array:
@@ -21,3 +25,24 @@ def binomial_bulk_lookup_ref(keys: jax.Array, n: int, omega: int = 16) -> jax.Ar
     E = np.uint32(1 << l)
     M = np.uint32(1 << (l - 1))
     return _unrolled_body(keys_u32, E, M, np.uint32(n), omega).astype(jnp.int32)
+
+
+def binomial_route_ref(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    state: jax.Array,
+    omega: int = 16,
+    max_chain: int = 4096,
+) -> jax.Array:
+    """Fused lookup + Memento remap oracle (same math as the fused kernel).
+
+    keys         any int shape; packed_mask (1, W) u32 bit-words;
+    state        (2,) u32 [n_total, first_alive].
+    """
+    return _route_fused_impl(
+        jnp.asarray(keys),
+        jnp.asarray(packed_mask, jnp.uint32),
+        jnp.asarray(state, jnp.uint32),
+        omega,
+        max_chain,
+    )

@@ -5,16 +5,25 @@
 tier taking millions of lookups per second.  ``BatchRouter`` embeds a u32
 ``SessionRouter`` (binomial32 base engine + u32 Memento chain) as its
 control plane — scalar lookups, stats and fleet-event bookkeeping all live
-there — and routes whole key batches on device:
+there — and routes whole key batches on device in ONE dispatch (DESIGN.md §3):
 
-    keys[N] --binomial_bulk_lookup_dyn--> buckets[N] --memento_remap--> replicas[N]
+    keys[N] --binomial_route_bulk--> replicas[N]     (fused lookup + remap)
 
-Both device stages take the fleet state as *traced* operands — the cluster
-size ``n_total`` as a scalar-prefetch/SMEM scalar, the removed-slot table as
-a fixed-``capacity`` bool array — so an arbitrary stream of scale-up /
-scale-down / fail / recover events re-uses one compiled executable per batch
-shape: zero retraces, which is exactly the paper's constant-time guarantee
-carried through to the compiled datapath.
+The fused kernel takes the fleet state as *traced*, *device-resident*
+operands — ``[n_total, first_alive]`` as a scalar-prefetch/SMEM 2-vector,
+the removed-slot set as a fixed-shape packed bit-table in VMEM — so an
+arbitrary stream of scale-up / scale-down / fail / recover events re-uses
+one compiled executable per batch shape: zero retraces, which is exactly the
+paper's constant-time guarantee carried through to the compiled datapath.
+Fleet events update the device copies incrementally (a one-word bit flip +
+``jax.device_put`` of a few hundred bytes, event-time only); ``route_keys``
+itself performs zero host->device state uploads and zero host round-trips —
+it accepts and returns ``jax.Array`` (``route_keys_np`` / ``route_batch``
+are the numpy convenience wrappers).
+
+The pre-fusion two-stage pipeline (``binomial_bulk_lookup_dyn`` then
+``memento_remap`` — two dispatches, ``buckets[N]`` materialised in HBM
+between them) is kept behind ``fused=False`` as the benchmark baseline.
 
 Bit-exactness (enforced by tests): for every key, the device path returns
 exactly what the embedded scalar router's ``domain.locate`` returns — the
@@ -22,16 +31,17 @@ scalar router is the oracle for the batched one.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core import bits
-from repro.core.memento_jax import memento_remap
-from repro.kernels.ops import binomial_bulk_lookup_dyn
+from repro.core.memento_jax import mask_words, memento_remap, pack_removed_mask
+from repro.kernels.ops import binomial_bulk_lookup_dyn, binomial_route_bulk
 from repro.serving.router import SessionRouter
 
 
 class BatchRouter:
-    """Route request batches through the dynamic-n kernel + device remap."""
+    """Route request batches through the fused single-dispatch kernel."""
 
     def __init__(
         self,
@@ -42,6 +52,7 @@ class BatchRouter:
         use_pallas: bool | None = None,
         interpret: bool = False,
         block_rows: int = 512,
+        fused: bool = True,
     ):
         if capacity is None:
             capacity = max(64, bits.next_pow2(2 * n_replicas))
@@ -54,12 +65,26 @@ class BatchRouter:
             n_replicas, engine="binomial32", chain_bits=32, omega=omega, max_chain=max_chain
         )
         self.capacity = capacity
+        self.n_words = mask_words(capacity)
         self.omega = omega
         self.max_chain = max_chain
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.block_rows = block_rows
-        self._mask: np.ndarray | None = None  # cached (capacity,) removed table
+        self.fused = fused
+        # canonical host mirror of the removed set (packed bit-words),
+        # mutated incrementally on fleet events
+        self._packed_host = pack_removed_mask((), capacity)
+        # device-resident fleet state: pinned once here, then refreshed only
+        # on fleet events — never rebuilt or re-uploaded per batch.  Only the
+        # operands the selected datapath reads are maintained: packed words +
+        # state 2-vector (fused), bool mask + split scalars (two-pass).
+        self._packed_dev: jax.Array | None = None
+        self._mask_dev: jax.Array | None = None
+        self._state_dev: jax.Array | None = None
+        self._n_dev: jax.Array | None = None
+        self._fa_dev: jax.Array | None = None
+        self._resync_device_state()
 
     @property
     def domain(self):
@@ -70,48 +95,114 @@ class BatchRouter:
         return self.scalar.stats
 
     # -- device-side fleet state -------------------------------------------
-    def _device_state(self):
-        if self._mask is None:
-            mask = np.zeros((self.capacity,), dtype=bool)
-            removed = list(self.domain.removed)
-            if removed:
-                mask[removed] = True
-            self._mask = mask
-        return (
-            self._mask,
-            np.uint32(self.domain.total_count),
-            np.uint32(self.domain.first_alive()),
-        )
+    def _resync_device_state(self) -> None:
+        """Rebuild the device operands from control-plane truth.
 
-    def _invalidate(self):
-        self._mask = None
+        Used at construction and after scale-down (which may garbage-collect
+        removed-slot tombstones off the end of the slot space); fail/recover
+        take the incremental single-bit path instead.
+        """
+        self._packed_host = pack_removed_mask(self.domain.removed, self.capacity)
+        self._put_mask()
+        self._put_scalars()
+
+    def _put_mask(self) -> None:
+        """Re-pin the removed-slot table for the selected datapath."""
+        if self.fused:
+            self._packed_dev = jax.device_put(self._packed_host)
+        else:
+            mask = np.zeros((self.capacity,), dtype=bool)
+            removed = self.domain.removed
+            if removed:
+                mask[list(removed)] = True
+            self._mask_dev = jax.device_put(mask)
+
+    def _put_scalars(self) -> None:
+        """Re-pin [n_total, first_alive] on device (a 8-byte upload)."""
+        n, fa = self.domain.total_count, self.domain.first_alive()
+        if self.fused:
+            self._state_dev = jax.device_put(np.array([n, fa], dtype=np.uint32))
+        else:
+            self._n_dev = jax.device_put(np.uint32(n))
+            self._fa_dev = jax.device_put(np.uint32(fa))
+
+    def _set_removed_bit(self, replica: int, removed: bool) -> None:
+        """Incremental fleet-event update: flip one mask bit, re-pin."""
+        word, bit = replica >> 5, np.uint32(1) << np.uint32(replica & 31)
+        if removed:
+            self._packed_host[0, word] |= bit
+        else:
+            self._packed_host[0, word] &= ~bit
+        self._put_mask()
+        self._put_scalars()  # first_alive may have changed
 
     # -- routing ------------------------------------------------------------
     session_key = staticmethod(SessionRouter.session_key)
 
-    def route_keys(self, keys) -> np.ndarray:
+    def _coerce_keys(self, keys) -> jax.Array | np.ndarray:
+        """Any int keys -> u32, truncating exactly like the scalar oracle.
+
+        Already-u32 arrays (jax or contiguous numpy) pass straight through —
+        no ``uint64 -> uint32`` double conversion, and for ``jax.Array`` no
+        host round-trip at all (wider jax ints are truncated in-trace by the
+        fused jit, which is the same mod-2^32 semantics).
+        """
+        if isinstance(keys, jax.Array):
+            return keys
+        if isinstance(keys, np.ndarray) and keys.dtype == np.uint32:
+            # no-op for contiguous input, one widen-free copy for views
+            return np.ascontiguousarray(keys)
+        return np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
+
+    def route_keys(self, keys) -> jax.Array:
         """Pre-hashed keys (any int array) -> int32 replica ids, on device.
 
-        Keys are truncated to u32 — identical to what the scalar u32 oracle
+        The hot path: ONE device dispatch (fused lookup + remap kernel), no
+        host round-trip — input ``jax.Array``s stay on device and the result
+        is returned as a ``jax.Array`` without synchronising.  Keys are
+        truncated to u32, identical to what the scalar u32 oracle
         (``binomial_lookup32`` / the u32 Memento chain) does with wide keys.
-        The raw-key hot path skips per-session movement bookkeeping; use
-        ``route_batch`` for session-level observability.
+        Skips per-session movement bookkeeping; use ``route_batch`` for
+        session-level observability, ``route_keys_np`` for a numpy result.
         """
-        keys_u32 = np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
-        mask, n_total, first_alive = self._device_state()
-        buckets = binomial_bulk_lookup_dyn(
-            keys_u32,
-            n_total,
-            omega=self.omega,
-            use_pallas=self.use_pallas,
-            interpret=self.interpret,
-            block_rows=self.block_rows,
-        )
-        out = memento_remap(
-            keys_u32, buckets, mask, n_total, first_alive, max_chain=self.max_chain
-        )
-        self.stats.lookups += int(keys_u32.size)
-        return np.asarray(out)
+        keys_u32 = self._coerce_keys(keys)
+        if self.fused:
+            out = binomial_route_bulk(
+                keys_u32,
+                self._packed_dev,
+                self._state_dev,
+                n_words=self.n_words,
+                omega=self.omega,
+                max_chain=self.max_chain,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
+                block_rows=self.block_rows,
+            )
+        else:
+            # pre-fusion two-pass pipeline (benchmark baseline): buckets[N]
+            # round-trips through HBM between two dispatches
+            buckets = binomial_bulk_lookup_dyn(
+                keys_u32,
+                self._n_dev,
+                omega=self.omega,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
+                block_rows=self.block_rows,
+            )
+            out = memento_remap(
+                keys_u32,
+                buckets,
+                self._mask_dev,
+                self._n_dev,
+                self._fa_dev,
+                max_chain=self.max_chain,
+            )
+        self.stats.lookups += int(np.size(keys_u32))
+        return out
+
+    def route_keys_np(self, keys) -> np.ndarray:
+        """Numpy-in/numpy-out convenience wrapper around ``route_keys``."""
+        return np.asarray(self.route_keys(keys))
 
     def route_batch(self, session_ids) -> np.ndarray:
         """Session ids (str/int) -> int32 replica ids, one device round-trip.
@@ -122,7 +213,7 @@ class BatchRouter:
         ``benchmarks/bench_router.py`` measures.
         """
         keys = [self.session_key(s) for s in session_ids]
-        out = self.route_keys(np.array(keys, dtype=np.uint64))
+        out = self.route_keys_np(np.array(keys, dtype=np.uint64))
         self.scalar.note_routes(keys, out)
         return out
 
@@ -131,26 +222,36 @@ class BatchRouter:
         return self.scalar.route(session_id)
 
     # -- fleet events --------------------------------------------------------
+    # Each event mutates the scalar control plane, then refreshes the device
+    # state: fail/recover flip one bit incrementally; scale-up touches only
+    # the scalar 2-vector; scale-down resyncs (tombstone GC can clear bits).
     def scale_up(self) -> int:
         if self.domain.total_count >= self.capacity:
             raise ValueError(
                 f"fleet at device-table capacity ({self.capacity}); "
                 "construct BatchRouter with a larger capacity"
             )
-        self._invalidate()
-        return self.scalar.scale_up()
+        r = self.scalar.scale_up()
+        self._put_scalars()
+        return r
 
     def scale_down(self) -> int:
-        self._invalidate()
-        return self.scalar.scale_down()
+        r = self.scalar.scale_down()
+        self._resync_device_state()
+        return r
 
     def fail(self, replica: int) -> None:
-        self._invalidate()
         self.scalar.fail(replica)
+        if replica in self.domain.removed:
+            self._set_removed_bit(replica, True)
+        else:
+            # failing the LAST slot is a true LIFO removal in the control
+            # plane (slot space shrinks, tombstones may GC) — resync wholesale
+            self._resync_device_state()
 
     def recover(self, replica: int) -> None:
-        self._invalidate()
         self.scalar.recover(replica)
+        self._set_removed_bit(replica, False)
 
     @property
     def alive(self) -> int:

@@ -3,10 +3,11 @@
 Each ``Replica`` owns model params and serves aligned batches: prefill the
 batch of prompts, then decode step-by-step (greedy).  The ``ServingTier``
 composes replicas with the BinomialHash ``BatchRouter``: the whole request
-batch is routed in one device round-trip (dynamic-n kernel + Memento remap),
-grouped by routed replica, each replica serves its group, and fleet events
-(fail/scale) only disturb the sessions the paper's guarantees say they may —
-and never recompile the routing datapath.
+batch is routed in ONE device dispatch (the fused lookup+remap kernel over
+device-resident fleet state, DESIGN.md §3), grouped by routed replica, each
+replica serves its group, and fleet events (fail/recover/scale) only disturb
+the sessions the paper's guarantees say they may — and never recompile or
+re-upload the routing datapath.
 """
 from __future__ import annotations
 
@@ -52,6 +53,8 @@ class Request:
 
 class ServingTier:
     def __init__(self, cfg: ArchConfig, params, n_replicas: int, max_len: int = 64):
+        self.cfg = cfg
+        self.max_len = max_len
         self.router = BatchRouter(n_replicas)
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
 
@@ -74,9 +77,31 @@ class ServingTier:
                 results[g.session_id] = row[: g.n_new]
         return results
 
-    # fleet events delegate to the router; replicas list stays (dead ones idle)
+    # fleet events delegate to the router; replicas list stays (dead ones
+    # idle) — except failing the LAST slot, which the control plane treats
+    # as a true LIFO retirement that shrinks the slot space
     def fail(self, replica: int):
         self.router.fail(replica)
+        del self.replicas[self.router.domain.total_count:]
 
     def recover(self, replica: int):
         self.router.recover(replica)
+
+    def scale_up(self, params) -> int:
+        """Append a replica serving ``params``; only movers re-prefill."""
+        if len(self.replicas) != self.router.domain.total_count:
+            raise RuntimeError(
+                f"replica list ({len(self.replicas)}) out of lockstep with "
+                f"router slot space ({self.router.domain.total_count}) — "
+                "was the router mutated directly instead of via the tier?"
+            )
+        new = self.router.scale_up()
+        self.replicas.append(Replica(self.cfg, params, self.max_len))
+        return new
+
+    def scale_down(self) -> int:
+        """Retire the last replica (LIFO, per the paper's operating model)."""
+        gone = self.router.scale_down()
+        # the router may garbage-collect failed tombstones off the end too
+        del self.replicas[self.router.domain.total_count:]
+        return gone

@@ -203,13 +203,19 @@ def test_batch_router_capacity_guard():
 
 @pytest.mark.slow
 def test_batch_router_1m_keys_zero_retrace_acceptance():
-    """Acceptance: 1M-key batch through the dynamic-n Pallas kernel with zero
-    retraces across >= 8 scale/fail events, bit-exact with the scalar router."""
-    router = BatchRouter(8, interpret=True)  # force the Pallas dyn kernel (CPU)
+    """Acceptance: 1M-key batches through the FUSED Pallas kernel (and the
+    two-pass baseline) with zero retraces across >= 8 scale/fail events,
+    bit-exact with the scalar router."""
+    from repro.kernels.binomial_hash import binomial_route_fused_2d
+
+    router = BatchRouter(8, interpret=True)  # force the fused Pallas kernel (CPU)
+    two_pass = BatchRouter(8, interpret=True, fused=False)
     scalar = SessionRouter(8, engine="binomial32", chain_bits=32)
     keys = RNG.integers(0, 2**64, size=(1 << 20,), dtype=np.uint64)
 
     router.route_keys(keys)  # compile once
+    two_pass.route_keys(keys)
+    fused_before = binomial_route_fused_2d._cache_size()
     kernel_before = binomial_bulk_lookup_dyn_2d._cache_size()
     remap_before = memento_remap._cache_size()
 
@@ -217,12 +223,17 @@ def test_batch_router_1m_keys_zero_retrace_acceptance():
     assert len(EVENTS) >= 8
     for ev, arg in EVENTS:
         _apply_events(router, [(ev, arg)])
+        _apply_events(two_pass, [(ev, arg)])
         _apply_events(scalar, [(ev, arg)])
-        out = router.route_keys(keys)
+        out = np.asarray(router.route_keys(keys))
         assert out.shape == keys.shape
         expect = [scalar.domain.locate(int(keys[j])) for j in sample]
         np.testing.assert_array_equal(out[sample], expect)
+        np.testing.assert_array_equal(
+            np.asarray(two_pass.route_keys(keys))[sample], expect
+        )
 
+    assert binomial_route_fused_2d._cache_size() == fused_before
     assert binomial_bulk_lookup_dyn_2d._cache_size() == kernel_before
     assert memento_remap._cache_size() == remap_before
 

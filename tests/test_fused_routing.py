@@ -1,0 +1,250 @@
+"""Fused single-dispatch routing kernel + device-resident BatchRouter state:
+bit-exactness vs the scalar SessionRouter oracle, the one-dispatch-per-batch
+guarantee, and zero retraces / zero state re-uploads across fleet events."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.binomial_jax import umod32
+from repro.core.memento_jax import (
+    binomial_memento_route,
+    mask_words,
+    pack_removed_mask,
+)
+from repro.kernels import ops
+from repro.kernels.binomial_hash import (
+    binomial_route_fused_2d,
+    binomial_route_pallas_fused,
+)
+from repro.kernels.ref import binomial_route_ref
+from repro.serving import batch_router as br_mod
+from repro.serving.batch_router import BatchRouter
+from repro.serving.router import SessionRouter
+
+RNG = np.random.default_rng(7)
+
+
+def _oracle_state(router: SessionRouter, capacity: int = 64):
+    dom = router.domain
+    packed = pack_removed_mask(dom.removed, capacity)
+    state = np.array([dom.total_count, dom.first_alive()], np.uint32)
+    return packed, state
+
+
+# ---------------------------------------------------------------------------
+# divide-free modulo (the in-kernel chain step building block)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 16, 37, 1000, (1 << 16) + 1, (1 << 31) - 1])
+def test_umod32_matches_native_mod(n):
+    x = RNG.integers(0, 2**32, size=(2048,), dtype=np.uint32)
+    out = np.asarray(umod32(jnp.asarray(x), np.uint32(n)))
+    np.testing.assert_array_equal(out, x % np.uint32(n))
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs the scalar SessionRouter oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5])
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_fused_kernel_pow2_boundaries(k, delta):
+    """Bit-exact vs SessionRouter at n in {2^k-1, 2^k, 2^k+1}, with failures."""
+    n = (1 << k) + delta
+    if n < 2:
+        pytest.skip("n < 2 is the degenerate single-bucket case")
+    oracle = SessionRouter(n, engine="binomial32", chain_bits=32)
+    if n > 2:
+        oracle.fail(n // 2)
+    packed, state = _oracle_state(oracle)
+    keys = RNG.integers(0, 2**32, size=(512,), dtype=np.uint32)
+    out = np.asarray(
+        binomial_route_pallas_fused(
+            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(state),
+            n_words=mask_words(64), interpret=True, block_rows=2,
+        )
+    )
+    expect = [oracle.domain.locate(int(x)) for x in keys]
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_fused_kernel_randomized_fail_recover_stream():
+    """The fused kernel tracks the oracle through a random event stream."""
+    router = BatchRouter(16, interpret=True, block_rows=2)
+    oracle = SessionRouter(16, engine="binomial32", chain_bits=32)
+    keys = RNG.integers(0, 2**64, size=(2048,), dtype=np.uint64)
+    rng = np.random.default_rng(5)
+    for _ in range(15):
+        removed = sorted(router.domain.removed)
+        roll = rng.random()
+        if removed and roll < 0.35:
+            r = int(rng.choice(removed))
+            router.recover(r), oracle.recover(r)
+        elif roll < 0.55 and router.domain.total_count < router.capacity:
+            router.scale_up(), oracle.scale_up()
+        elif roll < 0.7 and router.alive > 2:
+            router.scale_down(), oracle.scale_down()
+        elif router.alive > 2:
+            alive = [
+                b for b in range(router.domain.total_count - 1)
+                if b not in router.domain.removed
+            ]
+            r = int(rng.choice(alive))
+            router.fail(r), oracle.fail(r)
+        out = router.route_keys_np(keys)
+        expect = [oracle.domain.locate(int(k)) for k in keys]
+        np.testing.assert_array_equal(out, expect)
+
+
+def test_fused_paths_agree_with_ref_and_two_pass():
+    """pallas(interpret) == jnp jit == unjitted ref == two-pass BatchRouter."""
+    oracle = SessionRouter(12, engine="binomial32", chain_bits=32)
+    for r in (1, 4, 9):
+        oracle.fail(r)
+    packed, state = _oracle_state(oracle)
+    keys = RNG.integers(0, 2**32, size=(4096,), dtype=np.uint32)
+    kj = jnp.asarray(keys)
+    fused_pl = np.asarray(
+        binomial_route_pallas_fused(
+            kj, jnp.asarray(packed), jnp.asarray(state),
+            n_words=mask_words(64), interpret=True, block_rows=4,
+        )
+    )
+    fused_jnp = np.asarray(
+        binomial_memento_route(kj, jnp.asarray(packed), jnp.asarray(state))
+    )
+    ref = np.asarray(binomial_route_ref(kj, packed, state))
+    two_pass = BatchRouter(12, fused=False)
+    for r in (1, 4, 9):
+        two_pass.fail(r)
+    np.testing.assert_array_equal(fused_pl, fused_jnp)
+    np.testing.assert_array_equal(fused_pl, ref)
+    np.testing.assert_array_equal(fused_pl, two_pass.route_keys_np(keys))
+
+
+def test_fused_multiword_mask_cascade():
+    """capacity > 32 exercises the multi-word select cascade in the kernel."""
+    cap = 256
+    oracle = SessionRouter(100, engine="binomial32", chain_bits=32)
+    for r in (0, 31, 32, 63, 64, 95, 97):
+        oracle.fail(r)
+    packed, state = _oracle_state(oracle, capacity=cap)
+    assert mask_words(cap) == 8
+    keys = RNG.integers(0, 2**32, size=(1024,), dtype=np.uint32)
+    out = np.asarray(
+        binomial_route_pallas_fused(
+            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(state),
+            n_words=mask_words(cap), interpret=True, block_rows=2,
+        )
+    )
+    expect = [oracle.domain.locate(int(x)) for x in keys]
+    np.testing.assert_array_equal(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# the single-dispatch + device-resident-state guarantees
+# ---------------------------------------------------------------------------
+
+
+EVENTS = [
+    ("fail", 2),
+    ("scale_up", None),
+    ("fail", 5),
+    ("scale_down", None),
+    ("recover", 2),
+    ("scale_up", None),
+]
+
+
+def test_route_keys_is_exactly_one_dispatch_per_batch(monkeypatch):
+    """The fused path issues ONE device dispatch per batch and never touches
+    the two-pass entry points — asserted across scale/fail/recover events."""
+    router = BatchRouter(8, interpret=True, block_rows=8)
+    keys = RNG.integers(0, 2**64, size=(4096,), dtype=np.uint64)
+    router.route_keys(keys)  # compile once
+
+    calls = {"fused": 0}
+    real = ops.binomial_route_pallas_fused
+
+    def counting(*a, **k):
+        calls["fused"] += 1
+        return real(*a, **k)
+
+    def forbidden(*a, **k):  # pragma: no cover - the assertion IS the test
+        raise AssertionError("two-pass entry point reached on the fused path")
+
+    monkeypatch.setattr(ops, "binomial_route_pallas_fused", counting)
+    monkeypatch.setattr(ops, "binomial_bulk_lookup_pallas_dyn", forbidden)
+    monkeypatch.setattr(ops, "binomial_lookup_dyn", forbidden)
+    monkeypatch.setattr(br_mod, "binomial_bulk_lookup_dyn", forbidden)
+    monkeypatch.setattr(br_mod, "memento_remap", forbidden)
+
+    before = binomial_route_fused_2d._cache_size()
+    n_batches = 0
+    for ev, arg in EVENTS:
+        getattr(router, ev)(*(() if arg is None else (arg,)))
+        router.route_keys(keys)
+        n_batches += 1
+    assert calls["fused"] == n_batches  # exactly one dispatch per batch
+    assert binomial_route_fused_2d._cache_size() == before  # zero retraces
+
+
+def test_route_keys_zero_per_batch_state_uploads():
+    """Device fleet state is pinned at event time; route_keys re-uses the
+    same buffers — no per-batch host->device rebuild/upload."""
+    router = BatchRouter(8, interpret=True, block_rows=8)
+    keys = RNG.integers(0, 2**64, size=(2048,), dtype=np.uint64)
+    packed, state = router._packed_dev, router._state_dev
+    for _ in range(3):
+        router.route_keys(keys)
+        assert router._packed_dev is packed
+        assert router._state_dev is state
+    router.fail(3)  # event: state may be re-pinned...
+    packed, state = router._packed_dev, router._state_dev
+    assert packed is not None and state is not None
+    for _ in range(3):  # ...but batches still don't touch it
+        router.route_keys(keys)
+        assert router._packed_dev is packed
+        assert router._state_dev is state
+
+
+def test_route_keys_jax_in_jax_out():
+    """jax.Array in -> jax.Array out, no host round-trip forced; the numpy
+    wrapper and the device path agree."""
+    import jax
+
+    router = BatchRouter(8)
+    router.fail(2)
+    keys_np = RNG.integers(0, 2**32, size=(1024,), dtype=np.uint32)
+    keys_dev = jnp.asarray(keys_np)
+    out_dev = router.route_keys(keys_dev)
+    assert isinstance(out_dev, jax.Array)
+    out_np = router.route_keys_np(keys_np)
+    assert isinstance(out_np, np.ndarray)
+    np.testing.assert_array_equal(np.asarray(out_dev), out_np)
+
+
+def test_fail_last_slot_is_lifo_removal_not_stale_bit():
+    """Failing the last slot shrinks the slot space in the control plane;
+    the device mask must not keep a stale bit that poisons a later scale-up."""
+    router = BatchRouter(8, interpret=True, block_rows=2)
+    oracle = SessionRouter(8, engine="binomial32", chain_bits=32)
+    keys = RNG.integers(0, 2**64, size=(1024,), dtype=np.uint64)
+    for ev in (("fail", 7), ("scale_up", None), ("fail", 3), ("fail", 7)):
+        getattr(router, ev[0])(*(() if ev[1] is None else (ev[1],)))
+        getattr(oracle, ev[0])(*(() if ev[1] is None else (ev[1],)))
+        np.testing.assert_array_equal(
+            router.route_keys_np(keys), [oracle.domain.locate(int(k)) for k in keys]
+        )
+
+
+def test_coerce_keys_skips_redundant_conversions():
+    router = BatchRouter(4)
+    ku32 = np.ascontiguousarray(RNG.integers(0, 2**32, size=64, dtype=np.uint32))
+    assert router._coerce_keys(ku32) is ku32  # no u64->u32 double conversion
+    kdev = jnp.asarray(ku32)
+    assert router._coerce_keys(kdev) is kdev  # no host round-trip at all
+    wide = RNG.integers(0, 2**64, size=64, dtype=np.uint64)
+    np.testing.assert_array_equal(router._coerce_keys(wide), wide.astype(np.uint32))

@@ -1,0 +1,154 @@
+"""Memento remap edge cases: max_chain exhaustion -> first_alive fallback,
+all-removed-but-one fleets, and the alive-slot property under hypothesis —
+covering both the two-pass ``memento_remap`` and the fused route."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MementoWrapper, make
+from repro.core.binomial_jax import binomial_lookup_dyn
+from repro.core.memento_jax import (
+    binomial_memento_route,
+    mask_words,
+    memento_remap,
+    pack_removed_mask,
+)
+from repro.kernels.binomial_hash import binomial_route_pallas_fused
+from repro.serving.batch_router import BatchRouter
+
+RNG = np.random.default_rng(23)
+CAP = 64
+
+
+def _wrapper(n, removed, max_chain=4096):
+    eng = MementoWrapper(lambda m: make("binomial32", m), n, max_chain=max_chain,
+                         chain_bits=32)
+    for b in removed:
+        eng.remove_bucket(b)
+    return eng
+
+
+def _remap(keys, eng, max_chain):
+    mask = np.zeros((CAP,), dtype=bool)
+    mask[list(eng.removed)] = True
+    buckets = binomial_lookup_dyn(keys, np.uint32(eng.n_total))
+    return np.asarray(
+        memento_remap(keys, buckets, mask, np.uint32(eng.n_total),
+                      np.uint32(eng.first_alive()), max_chain=max_chain)
+    )
+
+
+def _fused(keys, eng, max_chain):
+    packed = pack_removed_mask(eng.removed, CAP)
+    state = np.array([eng.n_total, eng.first_alive()], np.uint32)
+    return np.asarray(
+        binomial_memento_route(jnp.asarray(keys), jnp.asarray(packed),
+                               jnp.asarray(state), max_chain=max_chain)
+    )
+
+
+# ---------------------------------------------------------------------------
+# max_chain exhaustion -> first_alive fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("max_chain", [0, 1, 2])
+@pytest.mark.parametrize("removed", [[0], [0, 1, 2], [3, 5]])
+def test_max_chain_exhaustion_falls_back_to_first_alive(max_chain, removed):
+    """With a tiny chain budget, lanes that exhaust it must land on
+    first_alive — identically on scalar, two-pass and fused paths."""
+    eng = _wrapper(8, removed, max_chain=max_chain)
+    keys = RNG.integers(0, 2**32, size=(2048,), dtype=np.uint32)
+    scal = np.array([eng.get_bucket(int(k)) for k in keys])
+    np.testing.assert_array_equal(_remap(keys, eng, max_chain), scal)
+    np.testing.assert_array_equal(_fused(keys, eng, max_chain), scal)
+    # max_chain=0 forces EVERY removed-slot lane onto first_alive
+    if max_chain == 0:
+        base = np.asarray(binomial_lookup_dyn(keys, np.uint32(eng.n_total)))
+        hit = np.isin(base, list(eng.removed))
+        assert hit.any()
+        assert (scal[hit] == eng.first_alive()).all()
+
+
+def test_batch_router_parity_with_exhausting_chain():
+    """BatchRouter(max_chain=0) stays bit-exact with its scalar oracle —
+    the fallback rides through the whole datapath, not just the remap."""
+    router = BatchRouter(8, max_chain=0, interpret=True, block_rows=2)
+    router.fail(0)
+    router.fail(4)
+    keys = RNG.integers(0, 2**64, size=(1024,), dtype=np.uint64)
+    out = router.route_keys_np(keys)
+    expect = [router.domain.locate(int(k)) for k in keys]
+    np.testing.assert_array_equal(out, expect)
+    assert 0 not in out and 4 not in out
+
+
+# ---------------------------------------------------------------------------
+# all-removed-but-one fleets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("survivor", [0, 3, 7])
+def test_all_removed_but_one_routes_everything_to_survivor(survivor):
+    n = 8
+    eng = _wrapper(n, [b for b in range(n) if b != survivor])
+    keys = RNG.integers(0, 2**32, size=(4096,), dtype=np.uint32)
+    out = _fused(keys, eng, 4096)
+    assert (out == survivor).all()
+    np.testing.assert_array_equal(out, _remap(keys, eng, 4096))
+    scal = np.array([eng.get_bucket(int(k)) for k in keys])
+    np.testing.assert_array_equal(out, scal)
+
+
+def test_all_removed_but_one_via_batch_router_events():
+    router = BatchRouter(8, interpret=True, block_rows=2)
+    for r in range(7):
+        router.fail(r)
+    assert router.alive == 1
+    keys = RNG.integers(0, 2**64, size=(2048,), dtype=np.uint64)
+    assert (router.route_keys_np(keys) == 7).all()
+    router.recover(3)
+    out = router.route_keys_np(keys)
+    assert set(np.unique(out)) <= {3, 7}
+    expect = [router.domain.locate(int(k)) for k in keys]
+    np.testing.assert_array_equal(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# property: remapped outputs always land on alive slots
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a test dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def fleets(draw):
+        n = draw(st.integers(min_value=2, max_value=CAP))
+        n_removed = draw(st.integers(min_value=0, max_value=n - 1))
+        removed = draw(
+            st.sets(st.integers(min_value=0, max_value=n - 1),
+                    min_size=n_removed, max_size=n_removed)
+        )
+        return n, sorted(removed)
+
+    @given(fleets(), st.integers(min_value=0, max_value=2**32 - 1),
+           st.integers(min_value=0, max_value=3))
+    @settings(max_examples=150, deadline=None)
+    def test_remap_always_lands_on_alive_slots(fleet, key_seed, max_chain_pow):
+        n, removed = fleet
+        max_chain = 4096 if max_chain_pow == 0 else (1 << max_chain_pow)
+        eng = _wrapper(n, removed, max_chain=max_chain)
+        keys = np.asarray(
+            np.random.default_rng(key_seed).integers(0, 2**32, size=(256,)),
+            dtype=np.uint32,
+        )
+        out = _fused(keys, eng, max_chain)
+        alive = np.array(eng.alive())
+        assert np.isin(out, alive).all(), (n, removed, max_chain)
+        np.testing.assert_array_equal(out, _remap(keys, eng, max_chain))

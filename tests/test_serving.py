@@ -98,3 +98,29 @@ def test_serving_tier_failover(tiny_model):
             assert now == routes_before[r.session_id]
         else:
             assert now != victim
+
+
+def test_serving_tier_elastic_scale_and_last_slot_fail(tiny_model):
+    """Replica list stays in lockstep with the router's slot space across
+    scale events AND last-slot failures (which are LIFO retirements)."""
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=3, max_len=32)
+    new = tier.scale_up(params)
+    assert new == 3 and len(tier.replicas) == 4
+    tier.fail(3)  # last slot: true LIFO removal, slot space shrinks
+    assert tier.router.domain.total_count == 3
+    assert len(tier.replicas) == 3
+    assert tier.scale_up(params) == 3  # no stale replica misalignment
+    assert len(tier.replicas) == 4
+    tier.fail(1)  # interior slot: tombstone, list untouched
+    assert len(tier.replicas) == 4
+    gone = tier.scale_down()  # retires slot 3
+    assert gone == 3 and len(tier.replicas) == 3
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(f"e-{i}", rng.integers(0, cfg.vocab_size, size=5).astype(np.int32), n_new=2)
+        for i in range(6)
+    ]
+    res = tier.serve(reqs)  # still serves everyone on replicas {0, 2}
+    assert set(res) == {r.session_id for r in reqs}
+    assert all(tier.router.route(r.session_id) in (0, 2) for r in reqs)
