@@ -1,24 +1,40 @@
 """Routing throughput: scalar SessionRouter vs the batched device datapaths.
 
-Three tiers, measured on (a) a steady batch stream and (b) a stream
-interleaved with scale/fail fleet events — the case the recompile-free
-dynamic-n datapath exists for:
+Three tiers, measured on (a) a steady batch stream, (b) a stream interleaved
+with scale/fail fleet events — the storm the constant-time replacement table
+exists for — and (c) a storm-severity sweep at fixed removed fractions:
 
-* ``scalar``   — one Python lookup at a time (``FailureDomain.locate``);
+* ``scalar``   — one Python lookup at a time (``FailureDomain.locate``,
+  table resolution: the scalar oracle of the device path);
 * ``two_pass`` — pre-fusion pipeline: dynamic-n bulk lookup, ``buckets[N]``
-  through HBM, then the Memento remap (two dispatches per batch);
-* ``fused``    — the single-dispatch fused lookup+remap kernel over
+  through HBM, then the table remap (two dispatches per batch);
+* ``fused``    — the single-dispatch fused lookup+divert kernel over
   device-resident fleet state (``BatchRouter`` default).
+
+Plus a multi-device section: the mesh-sharded datapath (DESIGN.md §8) run
+in a subprocess with fake host devices, so the shard_map path is exercised
+end-to-end even on a single-chip host.
 
 Outputs: ``name,us_per_call,derived`` lines for run.py, a CSV in
 benchmarks/out/ (gitignored), and the machine-readable ``BENCH_router.json``
-at the repo root — keys/sec and µs/batch per tier, tracked PR over PR.
-``--smoke`` shrinks sizes for the CI smoke step (exercises the full fused
-datapath incl. fleet events, in seconds).
+at the repo root — keys/sec and µs/batch per tier, tracked PR over PR
+(``benchmarks/check_router_regression.py`` gates CI on it).  ``--smoke``
+shrinks sizes for the CI smoke step (exercises the full fused datapath
+incl. fleet events, in seconds).
+
+Batch timings are BEST-OF-N over the iteration loop — the workloads are
+deterministic, so the minimum is the classic noise-resistant estimator (as
+in ``timeit``); means and even medians are badly inflated by
+scheduler/hypervisor interference on shared CI machines, and the
+storm/steady ratio this bench exists to track needs the noise floor low.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -33,6 +49,12 @@ N_REPLICAS = 16
 BATCH = 1 << 20  # >= 1M keys: the acceptance size for fused vs two-pass
 SCALAR_KEYS = 2000
 EVENTS = [("fail", 3), ("scale_up", None), ("recover", 3), ("scale_down", None)] * 2
+#: storm-severity sweep: fraction of the slot space tombstoned
+SEVERITIES = (0.0, 0.06, 0.25, 0.50)
+
+
+def _table_router(n: int) -> SessionRouter:
+    return SessionRouter(n, engine="binomial32", chain_bits=32, resolve="table")
 
 
 def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
@@ -42,33 +64,161 @@ def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
     return len(keys) / (time.perf_counter() - t0)
 
 
-def _batch_stats(router: BatchRouter, keys, iters: int) -> dict:
-    jax.block_until_ready(router.route_keys(keys))  # compile
-    t0 = time.perf_counter()
-    out = None
+def _timed(fn, iters: int) -> float:
+    """Best-of-``iters`` seconds per call (after one warmup).
+
+    The workload is deterministic, so the minimum is the classic
+    noise-resistant estimator (as in ``timeit``): anything above it is
+    scheduler/hypervisor interference, which on shared CI boxes routinely
+    inflates individual samples by 2-6x."""
+    jax.block_until_ready(fn())
+    best = float("inf")
     for _ in range(iters):
-        out = router.route_keys(keys)
-    jax.block_until_ready(out)
-    per_batch = (time.perf_counter() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _batch_stats(router: BatchRouter, keys, iters: int) -> dict:
+    per_batch = _timed(lambda: router.route_keys(keys), iters)
     return {
         "us_per_batch": per_batch * 1e6,
         "keys_per_sec": np.size(keys) / per_batch,
     }
 
 
-def _event_storm_stats(router: BatchRouter, keys) -> dict:
+def _event_storm_stats(router: BatchRouter, keys, iters: int) -> dict:
+    """One fleet event + one batch per sample — the recompile-free path must
+    absorb the event AND divert the affected keys without losing the batch
+    rate.
+
+    Per-batch wall time is recorded individually and the best-of-``iters``
+    is taken PER EVENT POSITION, then averaged over the event list: each
+    position's workload is deterministic (same event, same removed set), so
+    the cross-pass minimum strips scheduler/hypervisor interference without
+    hiding the storm cost a mean-over-the-pass would smear.
+    """
     jax.block_until_ready(router.route_keys(keys))  # compile
-    t0 = time.perf_counter()
-    out = None
-    for ev, arg in EVENTS:
-        getattr(router, ev)(*(() if arg is None else (arg,)))
-        out = router.route_keys(keys)
-    jax.block_until_ready(out)
-    per_batch = (time.perf_counter() - t0) / len(EVENTS)
+    per_pos = np.empty((iters, len(EVENTS)))
+    for i in range(iters):
+        for j, (ev, arg) in enumerate(EVENTS):
+            t0 = time.perf_counter()
+            getattr(router, ev)(*(() if arg is None else (arg,)))
+            jax.block_until_ready(router.route_keys(keys))
+            per_pos[i, j] = time.perf_counter() - t0
+    per_batch = float(per_pos.min(axis=0).mean())
     return {
         "us_per_batch": per_batch * 1e6,
         "keys_per_sec": np.size(keys) / per_batch,
     }
+
+
+def _severity_sweep(keys, iters: int, fused: bool) -> dict:
+    """Steady-state batch rate at fixed removed fractions of the slot space.
+
+    This isolates the divert cost from event-handling overhead: one fleet
+    per severity is prepared up front, then batches are timed ROUND-ROBIN
+    across the severities — interleaving puts every severity in the same
+    slow-drift noise windows (hypervisor throttling spans whole seconds),
+    so the cross-severity ratios the regression guard gates on
+    noise-cancel.  A flat profile across severities is the storm-proofing
+    claim this PR makes."""
+    routers, removed_counts = [], []
+    for frac in SEVERITIES:
+        router = BatchRouter(N_REPLICAS, fused=fused)
+        n_removed = int(round(frac * router.domain.total_count))
+        for b in range(n_removed):
+            router.fail(b)
+        jax.block_until_ready(router.route_keys(keys))  # compile + warm
+        routers.append(router)
+        removed_counts.append(n_removed)
+    best = [float("inf")] * len(SEVERITIES)
+    for _ in range(iters):
+        for i, router in enumerate(routers):
+            t0 = time.perf_counter()
+            jax.block_until_ready(router.route_keys(keys))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return {
+        f"{frac:.2f}": {
+            "us_per_batch": best[i] * 1e6,
+            "keys_per_sec": np.size(keys) / best[i],
+            "removed_slots": removed_counts[i],
+        }
+        for i, frac in enumerate(SEVERITIES)
+    }
+
+
+_MULTI_DEVICE_SCRIPT = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={n_dev} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.serving.batch_router import BatchRouter
+
+batch, iters = {batch}, {iters}
+rng = np.random.default_rng(0)
+keys = jnp.asarray(rng.integers(0, 2**64, size=(batch,), dtype=np.uint64)
+                   .astype(np.uint32))
+
+def timed(router):
+    jax.block_until_ready(router.route_keys(keys))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(router.route_keys(keys))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+mesh = jax.make_mesh(({n_dev},), ("data",))
+sharded = BatchRouter(16, mesh=mesh)
+single = BatchRouter(16)
+for r in (sharded, single):
+    r.fail(3)  # measure the storm path, the harder case
+res = {{
+    "n_devices": {n_dev},
+    "sharded_us_per_batch": timed(sharded) * 1e6,
+    "single_us_per_batch": timed(single) * 1e6,
+}}
+print("RESULTS " + json.dumps(res))
+"""
+
+
+def _multi_device_stats(batch: int, iters: int) -> dict:
+    """Run the mesh-sharded datapath in a subprocess with fake host devices.
+
+    On a CPU host the fake devices contend for the same cores (XLA:CPU
+    already parallelises single-device batches), so keys/s here validates
+    the shard_map path end-to-end rather than demonstrating chip scaling —
+    the honest expectation on real multi-chip hosts is near-linear because
+    the per-device work is embarrassingly parallel (no collectives).
+    """
+    n_dev = min(8, os.cpu_count() or 1)
+    script = _MULTI_DEVICE_SCRIPT.format(n_dev=n_dev, batch=batch, iters=iters)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src if not prev else src + os.pathsep + prev
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", script], env=env, capture_output=True,
+            text=True, timeout=900,
+        )
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS ")]
+        if out.returncode != 0 or not line:
+            return {"error": (out.stderr or out.stdout)[-2000:]}
+        res = json.loads(line[0][len("RESULTS "):])
+    except (subprocess.TimeoutExpired, OSError) as e:  # pragma: no cover
+        return {"error": str(e)}
+    res["batch_keys"] = batch
+    res["sharded_keys_per_sec"] = batch / (res["sharded_us_per_batch"] / 1e6)
+    res["sharded_over_single"] = (
+        res["single_us_per_batch"] / res["sharded_us_per_batch"]
+    )
+    return res
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -80,8 +230,11 @@ def main(argv: list[str] | None = None) -> None:
     )
     # run.py calls main() programmatically — don't inherit its sys.argv
     args = ap.parse_args([] if argv is None else argv)
-    batch = 1 << 14 if args.smoke else BATCH
-    iters = 3 if args.smoke else 10
+    # smoke batch stays large enough (128K keys) that the divert cost is
+    # visible over fixed dispatch overhead — the severity ratio the CI
+    # regression guard gates on needs that signal
+    batch = 1 << 17 if args.smoke else BATCH
+    iters = 20 if args.smoke else 15
     scalar_keys = 200 if args.smoke else SCALAR_KEYS
 
     rng = np.random.default_rng(0)
@@ -91,7 +244,7 @@ def main(argv: list[str] | None = None) -> None:
     keys = jnp.asarray(keys_np.astype(np.uint32))
     skeys = keys_np[:scalar_keys]
 
-    scalar = SessionRouter(N_REPLICAS, engine="binomial32", chain_bits=32)
+    scalar = _table_router(N_REPLICAS)
     fused = BatchRouter(N_REPLICAS)
     two_pass = BatchRouter(N_REPLICAS, fused=False)
 
@@ -102,7 +255,7 @@ def main(argv: list[str] | None = None) -> None:
     }
 
     # event storm: one fleet event per batch — the recompile-free path must
-    # absorb them; the scalar path re-walks its chains either way
+    # absorb them; the scalar path re-resolves its table either way
     t0 = time.perf_counter()
     for ev, arg in EVENTS:
         getattr(scalar, ev)(*(() if arg is None else (arg,)))
@@ -111,9 +264,17 @@ def main(argv: list[str] | None = None) -> None:
     s_ev_rate = len(EVENTS) * scalar_keys / (time.perf_counter() - t0)
     storm = {
         "scalar": {"keys_per_sec": s_ev_rate},
-        "fused": _event_storm_stats(fused, keys),
-        "two_pass": _event_storm_stats(two_pass, keys),
+        # full iteration budget: the per-position minimum needs as many
+        # passes as the steady loop to converge under hypervisor noise
+        "fused": _event_storm_stats(fused, keys, iters),
+        "two_pass": _event_storm_stats(two_pass, keys, iters),
     }
+
+    severity = {
+        "fused": _severity_sweep(keys, iters, fused=True),
+        "two_pass": _severity_sweep(keys, iters, fused=False),
+    }
+    multi_device = _multi_device_stats(batch, max(3, iters // 3))
 
     payload = {
         "bench": "router",
@@ -123,6 +284,8 @@ def main(argv: list[str] | None = None) -> None:
         "smoke": args.smoke,
         "steady": steady,
         "event_storm": storm,
+        "severity_sweep": severity,
+        "multi_device": multi_device,
         "speedup": {
             "fused_over_two_pass_steady": steady["two_pass"]["us_per_batch"]
             / steady["fused"]["us_per_batch"],
@@ -130,6 +293,12 @@ def main(argv: list[str] | None = None) -> None:
             / storm["fused"]["us_per_batch"],
             "fused_over_scalar_steady": steady["fused"]["keys_per_sec"]
             / steady["scalar"]["keys_per_sec"],
+            "fused_storm_over_steady": storm["fused"]["us_per_batch"]
+            / steady["fused"]["us_per_batch"],
+            "fused_worst_severity_over_healthy": max(
+                severity["fused"][f"{f:.2f}"]["us_per_batch"] for f in SEVERITIES
+            )
+            / severity["fused"]["0.00"]["us_per_batch"],
         },
     }
     # smoke runs land in gitignored benchmarks/out/ so they never clobber
@@ -146,16 +315,35 @@ def main(argv: list[str] | None = None) -> None:
             us = stats.get("us_per_batch", 1e6 * batch / rate)
             rows.append([stream, tier, f"{rate:.0f}", f"{us:.1f}"])
             emit(f"router_{tier}_{stream}", 1e6 / rate, f"{rate:.0f} lookups/s")
+    for frac in SEVERITIES:
+        stats = severity["fused"][f"{frac:.2f}"]
+        rows.append([f"severity_{frac:.2f}", "fused",
+                     f"{stats['keys_per_sec']:.0f}", f"{stats['us_per_batch']:.1f}"])
+        emit(
+            f"router_fused_severity_{int(frac * 100):02d}",
+            stats["us_per_batch"],
+            f"{stats['removed_slots']} slots removed",
+        )
     emit(
         "router_fused_batch_steady",
         steady["fused"]["us_per_batch"],
         f"{payload['speedup']['fused_over_two_pass_steady']:.2f}x vs two-pass, "
         f"{payload['speedup']['fused_over_scalar_steady']:.0f}x vs scalar",
     )
+    emit(
+        "router_fused_storm_over_steady",
+        storm["fused"]["us_per_batch"],
+        f"{payload['speedup']['fused_storm_over_steady']:.3f}x steady us/batch",
+    )
+    if "error" not in multi_device:
+        emit(
+            "router_sharded_storm",
+            multi_device["sharded_us_per_batch"],
+            f"{multi_device['n_devices']} devices, "
+            f"{multi_device['sharded_over_single']:.2f}x vs single",
+        )
     rows_to_csv("router", ["stream", "tier", "keys_per_sec", "us_per_batch"], rows)
 
 
 if __name__ == "__main__":
-    import sys
-
     main(sys.argv[1:])

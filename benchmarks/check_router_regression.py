@@ -1,0 +1,118 @@
+"""CI perf-regression guard for the routing datapath.
+
+Compares a fresh ``bench_router`` run against the committed
+``BENCH_router.json`` baseline and fails (exit 1) on a >30% regression of
+the fused datapath:
+
+* **storm-severity ratio** (always): ``speedup.fused_worst_severity_over_
+  healthy`` — the worst fixed-removed-fraction batch time over the healthy
+  batch time — must not regress more than the tolerance over the
+  baseline's.  Both sides of the ratio are same-size batches with no
+  event-handling in the timed region, so the check is scale-invariant: it
+  works even when the current run is a ``--smoke`` (small-batch) run on a
+  machine far slower than the one that produced the baseline.  This is the
+  guard for the storm-proofing property itself.
+* **event-storm ratio and absolute keys/s** (only when batch sizes match,
+  i.e. full run vs full baseline): the end-to-end
+  ``event_storm/steady`` ratio, plus fused steady and storm
+  ``keys_per_sec``, must each stay within the tolerance of the baseline.
+  The event-storm ratio carries a fixed per-event cost that only amortises
+  at full batch size, and absolute throughput across different CI machines
+  is meaningless — so a batch-size mismatch skips these with a note.
+
+Usage (the CI bench smoke step):
+
+    PYTHONPATH=src python -m benchmarks.bench_router --smoke
+    python benchmarks/check_router_regression.py \
+        --current benchmarks/out/BENCH_router.json --baseline BENCH_router.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fused(payload: dict, stream: str, key: str) -> float:
+    return float(payload[stream]["fused"][key])
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Return a list of failure messages (empty = pass)."""
+    failures: list[str] = []
+
+    cur_sev = float(current["speedup"]["fused_worst_severity_over_healthy"])
+    base_sev = float(baseline["speedup"]["fused_worst_severity_over_healthy"])
+    limit = base_sev * (1 + tolerance)
+    print(
+        f"worst-severity/healthy ratio: current {cur_sev:.3f} vs baseline "
+        f"{base_sev:.3f} (limit {limit:.3f})"
+    )
+    if cur_sev > limit:
+        failures.append(
+            f"fused storm-severity ratio regressed: {cur_sev:.3f} > "
+            f"{base_sev:.3f} * (1 + {tolerance:.0%})"
+        )
+
+    if current.get("batch_keys") == baseline.get("batch_keys"):
+        cur_ratio = _fused(current, "event_storm", "us_per_batch") / _fused(
+            current, "steady", "us_per_batch"
+        )
+        base_ratio = _fused(baseline, "event_storm", "us_per_batch") / _fused(
+            baseline, "steady", "us_per_batch"
+        )
+        print(
+            f"event-storm/steady ratio: current {cur_ratio:.3f} vs baseline "
+            f"{base_ratio:.3f} (limit {base_ratio * (1 + tolerance):.3f})"
+        )
+        if cur_ratio > base_ratio * (1 + tolerance):
+            failures.append(
+                f"fused event-storm/steady ratio regressed: {cur_ratio:.3f} > "
+                f"{base_ratio:.3f} * (1 + {tolerance:.0%})"
+            )
+        for stream in ("steady", "event_storm"):
+            cur = _fused(current, stream, "keys_per_sec")
+            base = _fused(baseline, stream, "keys_per_sec")
+            floor = base * (1 - tolerance)
+            print(
+                f"{stream} fused keys/s: current {cur:,.0f} vs baseline "
+                f"{base:,.0f} (floor {floor:,.0f})"
+            )
+            if cur < floor:
+                failures.append(
+                    f"fused {stream} keys/s regressed: {cur:,.0f} < "
+                    f"{base:,.0f} * (1 - {tolerance:.0%})"
+                )
+    else:
+        print(
+            f"batch sizes differ (current {current.get('batch_keys')} vs "
+            f"baseline {baseline.get('batch_keys')}): event-storm and "
+            "absolute keys/s checks skipped, the severity ratio above is "
+            "the gate"
+        )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="benchmarks/out/BENCH_router.json")
+    ap.add_argument("--baseline", default="BENCH_router.json")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(current, baseline, args.tolerance)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("router perf within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,6 @@ from repro.core.binomial_jax import (  # noqa: F401
     binomial_lookup_dyn,
     binomial_lookup_vec,
 )
-from repro.core.memento import MementoWrapper  # noqa: F401
-from repro.core.memento_jax import memento_remap  # noqa: F401
+from repro.core.memento import MementoWrapper, ReplacementTable  # noqa: F401
+from repro.core.memento_jax import memento_remap, memento_remap_table  # noqa: F401
 from repro.core.registry import CONSTANT_TIME, ENGINES, FULLY_CONSISTENT, make  # noqa: F401

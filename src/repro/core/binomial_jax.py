@@ -67,9 +67,11 @@ def umod32(x: jax.Array, n: jax.Array) -> jax.Array:
     """Bit-exact ``x % n`` for uint32 vectors and a scalar 1 <= n < 2**31.
 
     Restoring long division — shift/compare/subtract only, no integer divide,
-    so it lowers on the TPU VPU (which has none).  Used by the fused routing
-    kernel's Memento chain step; the pure-jnp fallback uses native ``%`` (XLA
-    has integer remainder on CPU/GPU) and tests pin the two equal.
+    so it lowers on the TPU VPU (which has none).  Library building block for
+    in-kernel chain-style modulo (the table divert uses the far cheaper
+    ``mulhi32`` Lemire reduction instead); the pure-jnp chain remap uses
+    native ``%`` (XLA has integer remainder on CPU/GPU) and tests pin the
+    two equal.
     """
     x = x.astype(jnp.uint32)
     n = jnp.asarray(n, jnp.uint32)
@@ -78,6 +80,27 @@ def umod32(x: jax.Array, n: jax.Array) -> jax.Array:
         r = (r << 1) | ((x >> np.uint32(k)) & np.uint32(1))
         r = jnp.where(r >= n, r - n, r)
     return r
+
+
+def mulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """High 32 bits of the u32xu32 product, in pure u32 ops (no u64 path).
+
+    ``(a * b) >> 32`` via 16-bit limb decomposition — exact for all inputs.
+    This is the Lemire range reduction used by the replacement-table divert:
+    ``mulhi32(H, p)`` maps a uniform u32 hash onto ``[0, p)`` with four
+    multiplies and a few adds/shifts, instead of an integer divide (absent
+    on the TPU VPU; a *vector*-divisor ``%`` is also ~10x the cost of these
+    ~11 ops on XLA:CPU, measured at 1M lanes).
+    """
+    a = a.astype(jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    al, ah = a & np.uint32(0xFFFF), a >> 16
+    bl, bh = b & np.uint32(0xFFFF), b >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    mid = (ll >> 16) + (lh & np.uint32(0xFFFF)) + (hl & np.uint32(0xFFFF))
+    return ah * bh + (lh >> 16) + (hl >> 16) + (mid >> 16)
 
 
 def highest_one_bit_index(b: jax.Array) -> jax.Array:

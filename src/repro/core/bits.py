@@ -81,6 +81,13 @@ def hash_pair32(h: int, f: int) -> int:
     return mix32((h ^ mix32((f + GOLDEN32) & MASK32)) & MASK32)
 
 
+def mulhi32(a: int, b: int) -> int:
+    """High 32 bits of the u32xu32 product — the Lemire range reduction
+    ``hash -> [0, b)`` used by ``ReplacementTable.resolve`` (scalar oracle of
+    ``repro.core.binomial_jax.mulhi32``)."""
+    return ((a & MASK32) * (b & MASK32)) >> 32
+
+
 # ---------------------------------------------------------------------------
 # u32 vectorised numpy flavour (bulk oracle; mirrors jnp code path exactly)
 # ---------------------------------------------------------------------------

@@ -27,25 +27,153 @@ The rejection chain comes in two word sizes:
   scalar oracle for the vectorised device remap in ``repro.core.memento_jax``
   (TPUs have no 64-bit integer datapath).  Pair it with a u32 base engine
   (``binomial32``) so the whole lookup+remap path shares one word size.
+
+Failure *resolution* also comes in two flavours (``resolve=``):
+
+* ``"chain"`` (default) — the rejection walk above: expected O(1) per key
+  but *data-dependent*; a batched device implementation pays
+  O(log batch / log(1/f)) full-batch rounds at removed-fraction f.
+* ``"table"`` — MementoHash-style replacement table (DESIGN.md §7): a
+  permutation of the slot space with an alive prefix (``ReplacementTable``),
+  updated O(1) per fleet event, resolving any removed slot in AT MOST TWO
+  u32-hash table redirects.  Storm-time lookup cost is a hard constant, so
+  the batched device path stays flat under failures.  This is the semantics
+  of the serving datapath (``repro.serving.batch_router.BatchRouter``) and
+  its scalar oracle.
 """
 from __future__ import annotations
 
 from repro.core import bits
 
 
+class ReplacementTable:
+    """Permutation of the slot space ``[0, n_total)`` with an alive prefix.
+
+    Invariants (maintained O(1) per event by swap):
+    * ``slots`` is a permutation of ``[0, n_total)``; ``pos`` is its inverse;
+    * ``slots[0:n_alive]`` are exactly the alive slots;
+    * ``slots[n_alive:]`` are exactly the removed slots.
+
+    Lookup for a key whose base bucket ``b`` is removed (``resolve``):
+
+    1. ``q = mulhi32(hash(key, b, iter=1), n_total)`` — the Lemire
+       reduction maps the u32 hash uniformly onto the position space
+       (mul+shift only: no integer divide, which the TPU VPU lacks and
+       which costs ~10x these ops with a vector divisor on XLA:CPU).  If
+       ``q < n_alive`` the redirect lands alive and we are done
+       (probability ``n_alive / n_total``).
+    2. otherwise ONE more redirect, ``q = mulhi32(hash_pair(h, q),
+       n_alive)`` — uniform over the alive prefix, alive by construction.
+       It chains off the first hash ``h`` and is seeded by the *position*
+       q, so no extra mixing of the key is spent on the deep round.
+
+    One ``slots`` gather, two u32 hashes, zero data-dependent iteration:
+    the device kernels implement the identical math on an uploaded copy of
+    ``slots`` (see ``repro.core.memento_jax``), so storm-time cost matches
+    steady-time cost.  Redirect 1's range is ``n_total`` — a *scalar*
+    frozen across fail/recover events (only scale events change it) — so a
+    failure or recovery re-aims only the redirected keys whose picked
+    position was one of the (at most two) positions the event swapped,
+    plus the second-order deep rounds: approximately minimal disruption,
+    like the rejection chain, without its data-dependent walk and without
+    a per-lane ``pos`` gather on the hot path.
+    """
+
+    def __init__(self, n: int):
+        self.slots = list(range(n))
+        self.pos = list(range(n))
+        self.n_alive = n
+
+    @property
+    def n_total(self) -> int:
+        return len(self.slots)
+
+    def _swap(self, i: int, j: int) -> None:
+        si, sj = self.slots[i], self.slots[j]
+        self.slots[i], self.slots[j] = sj, si
+        self.pos[si], self.pos[sj] = j, i
+
+    def fail(self, b: int) -> None:
+        """Alive slot b fails: swap it to the alive/removed boundary."""
+        if self.pos[b] >= self.n_alive:
+            raise ValueError(f"slot {b} is not alive")
+        self._swap(self.pos[b], self.n_alive - 1)
+        self.n_alive -= 1
+
+    def recover(self, b: int) -> None:
+        """Removed slot b recovers: swap it back into the alive prefix."""
+        if self.pos[b] < self.n_alive:
+            raise ValueError(f"slot {b} is not removed")
+        self._swap(self.pos[b], self.n_alive)
+        self.n_alive += 1
+
+    def append(self) -> int:
+        """LIFO scale-up: new slot id ``n_total`` joins the alive prefix."""
+        t = len(self.slots)
+        self.slots.append(t)
+        self.pos.append(t)
+        self._swap(t, self.n_alive)
+        self.n_alive += 1
+        return t
+
+    def pop_last(self) -> int:
+        """LIFO scale-down: slot id ``n_total - 1`` (alive or a tombstone)
+        leaves the slot space entirely."""
+        t = len(self.slots) - 1
+        if self.pos[t] < self.n_alive:  # alive: retire via the boundary
+            self._swap(self.pos[t], self.n_alive - 1)
+            self.n_alive -= 1
+        self._swap(self.pos[t], t)  # park at the last position, then drop
+        self.slots.pop()
+        self.pos.pop()
+        return t
+
+    def resolve(self, key: int, b: int) -> int:
+        """Divert ``key`` off removed slot ``b`` — at most two redirects.
+
+        ``key`` is masked to u32; the hashes are the same murmur3 fmix32
+        pair/iter mixers as the device kernels (bit-exact by construction).
+        """
+        key &= bits.MASK32
+        h = bits.hash_pair32(bits.hash_iter32(key, 1), b)
+        q = bits.mulhi32(h, self.n_total)
+        if q >= self.n_alive:
+            # chain the second hash off the first — h is already well mixed,
+            # so one pair-mix over the position q suffices
+            q = bits.mulhi32(bits.hash_pair32(h, q), self.n_alive)
+        return self.slots[q]
+
+
 class MementoWrapper:
     name = "memento"
     exact = False  # reconstruction of the published description
 
-    def __init__(self, base_factory, n: int, max_chain: int = 4096, chain_bits: int = 64):
-        """``base_factory(n) -> engine`` builds the underlying LIFO engine."""
+    def __init__(
+        self,
+        base_factory,
+        n: int,
+        max_chain: int = 4096,
+        chain_bits: int = 64,
+        resolve: str = "chain",
+    ):
+        """``base_factory(n) -> engine`` builds the underlying LIFO engine.
+
+        ``resolve="chain"`` walks the rejection chain (paper-faithful);
+        ``resolve="table"`` resolves removed slots through the
+        ``ReplacementTable`` in at most two redirects (the serving-datapath
+        semantics; ``max_chain`` is then irrelevant to lookups).
+        """
         if chain_bits not in (32, 64):
             raise ValueError(f"chain_bits must be 32 or 64, got {chain_bits}")
+        if resolve not in ("chain", "table"):
+            raise ValueError(f"resolve must be 'chain' or 'table', got {resolve!r}")
         self._base_factory = base_factory
         self.base = base_factory(n)
         self.removed: set[int] = set()
         self.max_chain = max_chain
         self.chain_bits = chain_bits
+        self.resolve = resolve
+        self.table = ReplacementTable(n) if resolve == "table" else None
 
     # -- size/state ---------------------------------------------------------
     @property
@@ -62,7 +190,10 @@ class MementoWrapper:
     # -- membership ---------------------------------------------------------
     def add_bucket(self) -> int:
         """LIFO append of a brand-new slot (scale-up)."""
-        return self.base.add_bucket()
+        out = self.base.add_bucket()
+        if self.table is not None:
+            self.table.append()
+        return out
 
     def remove_bucket(self, b: int | None = None) -> int:
         """Remove an arbitrary bucket (failure) or the last one (LIFO)."""
@@ -73,13 +204,19 @@ class MementoWrapper:
             # any tombstones that fall off the end.
             out = self.base.remove_bucket()
             self.removed.discard(out)
+            if self.table is not None:
+                self.table.pop_last()
             while self.n_total - 1 in self.removed and self.n_total > 1:
                 self.removed.discard(self.n_total - 1)
                 self.base.remove_bucket()
+                if self.table is not None:
+                    self.table.pop_last()
             return out
         if b in self.removed or not (0 <= b < self.n_total):
             raise ValueError(f"bucket {b} is not alive")
         self.removed.add(b)
+        if self.table is not None:
+            self.table.fail(b)
         return b
 
     def restore_bucket(self, b: int) -> None:
@@ -87,6 +224,8 @@ class MementoWrapper:
         if b not in self.removed:
             raise ValueError(f"bucket {b} is not removed")
         self.removed.discard(b)
+        if self.table is not None:
+            self.table.recover(b)
 
     # -- lookup -------------------------------------------------------------
     def _chain_step(self, key: int, b: int, i: int, total: int) -> int:
@@ -106,6 +245,8 @@ class MementoWrapper:
         b = self.base.get_bucket(key)
         if b not in self.removed:
             return b
+        if self.table is not None:
+            return self.table.resolve(key, b)
         total = self.n_total
         for i in range(self.max_chain):
             b = self._chain_step(key, b, i, total)

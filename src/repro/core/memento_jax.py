@@ -1,26 +1,30 @@
-"""Vectorised Memento-style failure remap — the device half of the serving
-datapath.
+"""Vectorised Memento-style failure resolution — the device half of the
+serving datapath.
 
-``MementoWrapper`` (scalar, host) diverts keys landing on removed slots down
-a deterministic rejection chain.  This module applies the identical chain to
-a whole batch of buckets on device, after the bulk BinomialHash lookup:
+Two device-side resolutions of keys that land on removed slots, mirroring
+the two host flavours in ``repro.core.memento``:
 
-    buckets = binomial_bulk_lookup_dyn(keys, n_total)       # Pallas kernel
-    buckets = memento_remap(keys, buckets, mask, n_total, first_alive)
+* **table** (``resolve="table"`` — the serving datapath, DESIGN.md §7):
+  the ``ReplacementTable`` slots permutation rides on device as a
+  ``(1, C)`` i32 array, uploaded at fleet-event time.  A removed bucket is
+  resolved by at most two u32 hash rounds and EXACTLY ONE table gather —
+  no data-dependent loop, so storm-time batch cost equals steady-time cost.
+  ``binomial_memento_route`` fuses base lookup + table divert under one jit
+  (the pure-jnp mirror of the fused Pallas kernel);
+  ``memento_remap_table`` is the second dispatch of the two-pass baseline.
 
-The replacement table is a single ``(capacity,)`` bool array (``mask[b]`` is
-True iff slot ``b`` is removed) — O(capacity) device bytes, updated on fleet
-events with one small host->device transfer.  ``capacity`` is a static upper
-bound on the fleet size, so the array shape — and therefore the compiled
-executable — is invariant across arbitrary scale/fail event streams;
-``n_total`` rides in as a traced scalar exactly like the kernel's n.
+* **chain** (``resolve="chain"`` — paper-faithful library flavour):
+  ``memento_remap`` applies the deterministic rejection chain to a whole
+  batch of buckets via a ``lax.while_loop`` over the batch.  Each round is
+  one gather + one mix over all lanes; the loop exits when every lane has
+  settled, so the expected cost is O(n_total / n_alive) rounds — but the
+  number of rounds is data-dependent (max over the batch), which is exactly
+  the storm-time cliff the table flavour removes.  Bit-exact against
+  ``MementoWrapper(chain_bits=32)`` (tests enforce).
 
-Bit-exact against ``MementoWrapper(chain_bits=32)``: both sides step
-``b <- hash_pair32(hash_iter32(key, i+1), b) % n_total`` until an alive slot
-(tests enforce this).  The loop is a ``lax.while_loop`` over the *batch* —
-each round is one gather + one mix over all lanes, and the loop exits as
-soon as every lane has settled, so the expected cost is
-O(n_total / n_alive) rounds, O(1) while failures are a bounded fraction.
+Both keep every fleet-state operand fixed-shape and traced (``capacity`` is
+a static upper bound on the fleet size), so the compiled executables are
+invariant across arbitrary scale/fail/recover event streams.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ from repro.core.binomial_jax import (
     _unrolled_body,
     hash_iter,
     hash_pair,
+    mulhi32,
     next_pow2_u32,
 )
 
@@ -62,6 +67,30 @@ def pack_removed_mask(removed, capacity: int, lanes: int = MASK_LANES) -> np.nda
         if not 0 <= b < capacity:
             raise ValueError(f"removed slot {b} outside capacity {capacity}")
         packed[0, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+    return packed
+
+
+def table_width(capacity: int, lanes: int = MASK_LANES) -> int:
+    """Lane-padded width of the device replacement table for ``capacity``."""
+    return -(-capacity // lanes) * lanes
+
+
+def pack_table(table, capacity: int, lanes: int = MASK_LANES) -> np.ndarray:
+    """``ReplacementTable`` -> ``(1, C)`` int32 device operand.
+
+    The ``slots`` permutation (alive prefix first); ``pos`` stays host-side
+    (it exists to make the event-time swaps O(1), the device lookup never
+    reads it).  ``C`` is ``capacity`` rounded up to a multiple of ``lanes``
+    so the operand is a whole native VMEM block; the padding entries are
+    never gathered (every index is < n_total <= capacity).  Shape is fixed
+    across arbitrary fleet-event streams — this is the host-side mirror the
+    incremental event-time uploads re-pin.
+    """
+    n = table.n_total
+    if n > capacity:
+        raise ValueError(f"table spans {n} slots, exceeding capacity {capacity}")
+    packed = np.zeros((1, table_width(capacity, lanes)), dtype=np.int32)
+    packed[0, :n] = table.slots
     return packed
 
 
@@ -106,107 +135,150 @@ def memento_remap(
 
 
 # ---------------------------------------------------------------------------
-# fused lookup + remap: the whole routing decision under ONE jit dispatch.
+# table-based resolution: storm-time cost == steady-time cost.
 # ---------------------------------------------------------------------------
 
 
-def _route_fused_impl(
+def _table_divert(
+    keys_u32: jax.Array,
+    b: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    n_words: int,
+) -> jax.Array:
+    """Divert buckets off removed slots — EXACTLY ONE gather, no loop.
+
+    Mirrors ``ReplacementTable.resolve`` lane-wise (DESIGN.md §7):
+
+    1. ``q = mulhi32(h, n_total)`` with ``h = hash(key, b, iter=1)`` —
+       Lemire reduction to a position in the permutation; alive iff
+       ``q < n_alive`` (probability n_alive / n_total);
+    2. else ``q = mulhi32(hash_pair(h, q), n_alive)`` — a position in the
+       alive prefix, alive by construction (chained off ``h`` and seeded by
+       the *position*, so no gather is needed between the rounds).
+
+    Membership is a select cascade over the ``n_words`` packed mask words —
+    pure elementwise ops that fuse into the hash pass, unlike a per-lane
+    LUT gather.  The whole divert is therefore one fused elementwise pass +
+    one final ``slots`` gather per lane — data-independent and one memory
+    pass short of the two-gather variant, which is what keeps an event
+    storm off the batch critical path on memory-bound hosts.
+    """
+    total = state[0].astype(jnp.uint32)
+    n_alive = state[1].astype(jnp.uint32)
+    slots = table[0].astype(jnp.uint32)
+    words = packed_mask.reshape(-1)
+    w = b >> np.uint32(5)
+    word = jnp.zeros_like(b)
+    for s in range(n_words):
+        word = jnp.where(w == np.uint32(s), words[s], word)
+    hit = ((word >> (b & np.uint32(31))) & np.uint32(1)) != 0
+    h = hash_pair(hash_iter(keys_u32, np.uint32(1)), b)
+    q = mulhi32(h, total)
+    deep = q >= n_alive  # a removed position: one more redirect settles it
+    # second hash chains off the first (h is well mixed; one pair-mix over q)
+    q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
+    # q is in-bounds by construction (q < n_total <= C) — promise_in_bounds
+    # skips XLA's clamp logic (~30% cheaper gathers on XLA:CPU at 1M lanes)
+    return jnp.where(hit, slots.at[q].get(mode="promise_in_bounds"), b)
+
+
+def _route_table_impl(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     omega: int,
-    max_chain: int,
+    n_words: int,
 ) -> jax.Array:
     """Traceable body shared by ``binomial_memento_route`` (jit'd, CPU/GPU
     fallback) and ``kernels.ref.binomial_route_ref`` (unjitted oracle).
 
     keys         any int shape S (uint32 key space)
     packed_mask  (1, W) uint32 bit-words — bit b set iff slot b removed
-    state        (2,) uint32 — [n_total, first_alive]
+    table        (1, C) int32 — the slots permutation (``pack_table``)
+    state        (2,) uint32 — [n_total, n_alive]
+    n_words      static mask word count (= ceil(capacity/32)), bounding the
+                 membership select cascade
     """
     shape = keys.shape
     keys_u32 = keys.reshape(-1).astype(jnp.uint32)
     total = state[0].astype(jnp.uint32)
-    first_alive = state[1].astype(jnp.uint32)
+    n_alive = state[1].astype(jnp.uint32)
     E = next_pow2_u32(total)
     M = E >> 1
     b = _unrolled_body(keys_u32, E, M, total, omega)
     b = jnp.where(total <= np.uint32(1), np.uint32(0), b)
 
-    # Expand the packed words into a (capacity,) bool LUT once per call —
-    # membership then costs ONE gather per lane per round instead of
-    # gather+shift+mask arithmetic.  (The Pallas kernel keeps the packed
-    # select-cascade: no vector gather on the VPU.)
-    words = packed_mask.reshape(-1)
-    slot = jnp.arange(words.shape[0] * 32, dtype=jnp.uint32)
-    removed_lut = ((words[slot >> 5] >> (slot & np.uint32(31))) & np.uint32(1)) != 0
-
-    def removed(bv):
-        return removed_lut[bv]
-
-    # Loop shape is performance-critical on XLA:CPU, in three non-obvious
-    # ways (measured on 1M-key batches; the Pallas kernel keeps the classic
-    # test-first loop because its carry lives in registers/VMEM, not HBM):
-    # * the ω-unrolled producer of ``b`` must have exactly ONE consumer — the
-    #   carry init.  Testing membership outside the loop (``removed(b)``)
-    #   hands the fusion pass a second elementwise consumer and it happily
-    #   recomputes all ~850 ops of the producer into it (2x batch latency;
-    #   optimization_barrier gets stripped).  So the membership test lives
-    #   INSIDE the body, on the materialised carry, and ``active`` starts
-    #   all-True — one extra (cheap) round on a healthy fleet.
-    # * that extra round must not pay for hashing: the chain step is wrapped
-    #   in ``lax.cond`` so a round with no active lanes skips it entirely.
-    # * the chain recomputes hash_iter(keys, i+1) from the closed-over keys
-    #   instead of carrying a hash accumulator — an extra while-loop carry is
-    #   a whole keys-sized buffer XLA:CPU copies in and out even for zero
-    #   rounds.
-    def cond(state_):
-        i, _, act = state_
-        return (i < np.uint32(max_chain)) & jnp.any(act)
-
-    def body(state_):
-        i, bb, act = state_
-        act = act & removed(bb)
-
-        def step(bb):
-            nb = hash_pair(hash_iter(keys_u32, i + np.uint32(1)), bb) % total
-            return jnp.where(act, nb, bb)
-
-        bb = jax.lax.cond(jnp.any(act), step, lambda bb: bb, bb)
-        return i + np.uint32(1), bb, act
-
-    def chain(b):
-        _, b, active = jax.lax.while_loop(
-            cond, body, (jnp.uint32(0), b, jnp.ones(b.shape, dtype=bool))
-        )
-        # ``active`` lags one membership test behind ``b`` (and is all-True
-        # when max_chain == 0): re-test the final buckets for exhaustion.
-        return jnp.where(active & removed(b), first_alive, b)
-
-    # Healthy-fleet fast path: with zero removed slots — the steady state —
-    # a scalar reduction over the TINY packed mask skips the whole chain, so
-    # the fused cost degenerates to the base lookup alone.
-    b = jax.lax.cond(jnp.any(words != 0), chain, lambda b: b, b)
+    # Healthy-fleet fast path: one scalar compare skips the divert entirely,
+    # so the steady-state fused cost degenerates to the base lookup alone.
+    # The cond boundary also keeps the ω-unrolled producer of ``b`` at
+    # exactly ONE consumer — XLA:CPU's fusion pass happily duplicates the
+    # ~850-op producer into each additional elementwise consumer otherwise
+    # (measured at 2x batch latency in the PR 2 chain implementation).
+    b = jax.lax.cond(
+        n_alive != total,
+        lambda bb: _table_divert(keys_u32, bb, packed_mask, table, state, n_words),
+        lambda bb: bb,
+        b,
+    )
     return b.astype(jnp.int32).reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("omega", "max_chain"))
+@functools.partial(jax.jit, static_argnames=("omega", "n_words"))
 def binomial_memento_route(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     omega: int = 16,
-    max_chain: int = 4096,
+    *,
+    n_words: int,
 ) -> jax.Array:
-    """Fused BinomialHash lookup + Memento remap — one device dispatch.
+    """Fused BinomialHash lookup + replacement-table divert — one dispatch.
 
     The pure-jnp mirror of the fused Pallas kernel
     (``repro.kernels.binomial_hash.binomial_route_fused_2d``): the ω-unrolled
-    base lookup feeds the rejection chain in-trace, so no intermediate
-    ``buckets[N]`` array ever round-trips through HBM and a
+    base lookup feeds the one-gather table divert in-trace, so no
+    intermediate ``buckets[N]`` array ever round-trips through HBM and a
     ``BatchRouter.route_keys`` call costs exactly one dispatch.  All fleet
-    state is traced (``packed_mask`` fixed-shape, ``state`` a 2-vector), so
-    scale/fail/recover streams never retrace.  Bit-exact against the scalar
-    ``SessionRouter(binomial32, chain_bits=32)`` oracle (tests enforce).
+    state is traced and fixed-shape (``packed_mask``, ``table``, the state
+    2-vector), so scale/fail/recover streams never retrace.  Bit-exact
+    against the scalar ``SessionRouter(binomial32, chain_bits=32,
+    resolve="table")`` oracle (tests enforce).
     """
-    return _route_fused_impl(keys, packed_mask, state, omega, max_chain)
+    return _route_table_impl(keys, packed_mask, table, state, omega, n_words)
+
+
+@functools.partial(jax.jit, static_argnames=("n_words",))
+def memento_remap_table(
+    keys: jax.Array,
+    buckets: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    *,
+    n_words: int,
+) -> jax.Array:
+    """Second dispatch of the two-pass table baseline: divert pre-computed
+    buckets off removed slots (``buckets[N]`` round-trips through HBM
+    between the lookup dispatch and this one — the cost the fused kernel
+    removes).
+
+    keys    any int shape S; buckets shape S in [0, n_total)
+    packed_mask (1, W) u32 bit-words; table (1, C) i32 slots permutation;
+    state   (2,) u32 [n_total, n_alive]; n_words static mask word count
+    """
+    shape = buckets.shape
+    keys_u32 = keys.reshape(-1).astype(jnp.uint32)
+    b = buckets.reshape(-1).astype(jnp.uint32)
+    total = state[0].astype(jnp.uint32)
+    n_alive = state[1].astype(jnp.uint32)
+    b = jax.lax.cond(
+        n_alive != total,
+        lambda bb: _table_divert(keys_u32, bb, packed_mask, table, state, n_words),
+        lambda bb: bb,
+        b,
+    )
+    return b.astype(jnp.int32).reshape(shape)

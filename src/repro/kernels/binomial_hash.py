@@ -28,11 +28,13 @@ Two flavours of the same kernel body:
 Plus the serving hot path built on the dynamic flavour:
 
 * **fused** (``binomial_route_fused_2d`` / ``binomial_route_pallas_fused``) —
-  the dynamic-n lookup *and* the bounded Memento rejection chain in one
-  kernel (DESIGN.md §3).  ``[n_total, first_alive]`` is the scalar-prefetch
-  SMEM operand, the packed removed-slot mask a whole-block VMEM operand, and
-  final replica ids are written in a single pass: no intermediate
-  ``buckets[N]`` HBM round-trip and ONE device dispatch per batch.
+  the dynamic-n lookup *and* the replacement-table failure divert in one
+  kernel (DESIGN.md §3, §7).  ``[n_total, n_alive]`` is the scalar-prefetch
+  SMEM operand, the packed removed-slot mask and the (1, C) slots
+  permutation are whole-block VMEM operands, and final replica ids are written in
+  a single pass: no intermediate ``buckets[N]`` HBM round-trip, ONE device
+  dispatch per batch, and a storm-time cost equal to the steady-time cost
+  (at most two bounded table gathers per lane, never a rejection walk).
   ``repro.serving.batch_router.BatchRouter`` routes whole request batches
   through this kernel with device-resident fleet state — zero recompiles and
   zero per-batch host->device state uploads across arbitrary scale/fail
@@ -53,8 +55,8 @@ from repro.core.binomial_jax import (
     _unrolled_body,
     hash_pair,
     mix32,
+    mulhi32,
     next_pow2_u32,
-    umod32,
 )
 
 LANES = 128  # TPU minor-dim tile
@@ -192,25 +194,31 @@ def binomial_bulk_lookup_pallas_dyn(
 
 
 # ---------------------------------------------------------------------------
-# fused flavour: BinomialHash lookup + Memento rejection chain in ONE kernel.
+# fused flavour: BinomialHash lookup + replacement-table divert in ONE kernel.
 # The serving hot path — no intermediate buckets[N] HBM round-trip, one
 # dispatch per batch.  Fleet state rides as traced operands:
-#   * [n_total, first_alive] — scalar-prefetch (SMEM before the grid runs);
-#   * packed removed mask    — (1, W) u32 bit-words, whole-block VMEM operand
-#     re-used by every grid step (W = capacity/32 words, lane-padded).
-# The chain reads the mask with a select cascade over the W words (static
-# count) instead of a per-lane gather — VPU-friendly — and its `% n_total`
-# uses divide-free restoring division (`umod32`; the VPU has no integer
-# divide).  With no removed slots the while loop exits before one round, so
-# the healthy-fleet cost is the base lookup alone.
+#   * [n_total, n_alive]  — scalar-prefetch (SMEM before the grid runs);
+#   * packed removed mask — (1, W) u32 bit-words, whole-block VMEM operand
+#     re-used by every grid step (W = capacity/32 words, lane-padded);
+#   * replacement table   — (1, C) i32 slots permutation, whole-block VMEM
+#     operand (DESIGN.md §7), rebuilt incrementally at fleet-event time.
+# Removed buckets resolve via two bounded hash rounds and EXACTLY ONE table
+# read (the MementoHash-style divert) instead of a data-dependent rejection
+# walk, so storm-time block cost equals steady-time cost.  The VPU has no
+# vector gather, so the table read is a select cascade over the C static
+# entries (and membership over the W mask words); the divert's range
+# reductions use the Lemire mulhi32 mul+shift (the VPU has no integer
+# divide either).  With no removed slots a single `jnp.any` skips the whole
+# divert, so the healthy-fleet cost is the base lookup alone.
 # ---------------------------------------------------------------------------
 
 
 def _kernel_fused(
-    state_ref, mask_ref, keys_ref, out_ref, *, omega: int, max_chain: int, n_words: int
+    state_ref, mask_ref, table_ref, keys_ref, out_ref, *, omega: int,
+    n_words: int, n_slots: int,
 ):
     n = state_ref[0].astype(jnp.uint32)
-    first_alive = state_ref[1].astype(jnp.uint32)
+    n_alive = state_ref[1].astype(jnp.uint32)
     E = next_pow2_u32(n)
     M = E >> 1
     keys = keys_ref[...].astype(jnp.uint32)
@@ -219,55 +227,67 @@ def _kernel_fused(
 
     def removed(bv):
         # select-cascade membership test over the packed bit-words: W scalar
-        # broadcasts + selects per round, no vector gather needed.
+        # broadcasts + selects, no vector gather needed.  Cheaper than the
+        # n_slots-wide table cascade — this is why the kernel keeps the mask
+        # operand: the steady-state skip test touches W words, not C slots.
         w = bv >> np.uint32(5)
         word = jnp.zeros_like(bv)
         for s in range(n_words):
             word = jnp.where(w == np.uint32(s), mask_ref[0, s], word)
         return ((word >> (bv & np.uint32(31))) & np.uint32(1)) != 0
 
-    active = removed(b)
+    def gather(idx):
+        # select-cascade "gather" from the slots permutation: C scalar
+        # broadcasts + selects per read (idx is always < n_total <= C).
+        out = jnp.zeros_like(idx)
+        for s in range(n_slots):
+            out = jnp.where(
+                idx == np.uint32(s), table_ref[0, s].astype(jnp.uint32), out
+            )
+        return out
 
-    def cond(carry):
-        i, _, _, act = carry
-        return (i < np.uint32(max_chain)) & jnp.any(act)
+    hit = removed(b)
 
-    def body(carry):
-        i, kacc, bb, act = carry
-        # hash_iter(key, i+1) via the running accumulator: one add + mix32.
-        kacc = kacc + GOLDEN32
-        nb = umod32(hash_pair(mix32(kacc), bb), n)
-        bb = jnp.where(act, nb, bb)
-        return i + np.uint32(1), kacc, bb, act & removed(bb)
+    def divert(bb):
+        # ReplacementTable.resolve, lane-wise: two bounded redirects, the
+        # Lemire mulhi32 reduction in place of a modulo (the VPU has no
+        # integer divide, and mulhi32 is ~11 mul/shift/add ops), then ONE
+        # table read.
+        h = hash_pair(mix32(keys + GOLDEN32), bb)  # hash_iter(key, 1) folded
+        q = mulhi32(h, n)
+        deep = q >= n_alive  # a removed position: one more redirect settles it
+        # second hash chains off the first (h is well mixed; one pair-mix)
+        q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
+        return jnp.where(hit, gather(q), bb)
 
-    _, _, b, active = jax.lax.while_loop(
-        cond, body, (jnp.uint32(0), keys, b, active)
-    )
-    b = jnp.where(active, first_alive, b)
+    b = jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)
     out_ref[...] = b.astype(jnp.int32)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_words", "omega", "max_chain", "block_rows", "interpret"),
+    static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
 )
 def binomial_route_fused_2d(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     n_words: int,
+    n_slots: int,
     omega: int = 16,
-    max_chain: int = 4096,
     block_rows: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
     """(rows, 128) u32 keys + fleet state -> (rows, 128) int32 replica ids.
 
-    One ``pallas_call`` — base lookup *and* failure remap.  ``state`` is the
-    (2,) u32 ``[n_total, first_alive]`` scalar-prefetch operand; ``packed_mask``
-    is the (1, W) u32 removed-slot bit-table (see
-    ``repro.core.memento_jax.pack_removed_mask``); ``n_words`` is the static
-    number of payload words (= capacity/32), bounding the select cascade.
+    One ``pallas_call`` — base lookup *and* failure divert.  ``state`` is
+    the (2,) u32 ``[n_total, n_alive]`` scalar-prefetch operand;
+    ``packed_mask`` is the (1, W) u32 removed-slot bit-table
+    (``repro.core.memento_jax.pack_removed_mask``); ``table`` is the (1, C)
+    i32 slots permutation (``repro.core.memento_jax.pack_table``).
+    ``n_words`` / ``n_slots`` are the static payload extents (capacity/32
+    mask words, capacity table slots) bounding the select cascades.
     Everything dynamic is traced, so fleet events never retrace.
     """
     rows, lanes = keys.shape
@@ -279,20 +299,25 @@ def binomial_route_fused_2d(
         raise ValueError(
             f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]"
         )
+    if not 1 <= n_slots <= table.shape[1]:
+        raise ValueError(
+            f"n_slots ({n_slots}) must be in [1, {table.shape[1]}]"
+        )
     grid = (rows // block_rows,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            # whole-block mask: same (1, W) block for every grid step
+            # whole-block mask/table: same small blocks for every grid step
             pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
+            pl.BlockSpec(table.shape, lambda i, s: (0, 0)),
             pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
     )
     return pl.pallas_call(
         functools.partial(
-            _kernel_fused, omega=omega, max_chain=max_chain, n_words=n_words
+            _kernel_fused, omega=omega, n_words=n_words, n_slots=n_slots
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
@@ -300,6 +325,7 @@ def binomial_route_fused_2d(
     )(
         jnp.asarray(state, jnp.uint32).reshape(2),
         packed_mask.astype(jnp.uint32),
+        table.astype(jnp.int32),
         keys.astype(jnp.uint32),
     )
 
@@ -307,10 +333,11 @@ def binomial_route_fused_2d(
 def binomial_route_pallas_fused(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     n_words: int,
+    n_slots: int,
     omega: int = 16,
-    max_chain: int = 4096,
     block_rows: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
@@ -324,10 +351,11 @@ def binomial_route_pallas_fused(
     out = binomial_route_fused_2d(
         flat.reshape(-1, LANES),
         packed_mask,
+        table,
         state,
         n_words,
+        n_slots,
         omega=omega,
-        max_chain=max_chain,
         block_rows=block_rows,
         interpret=interpret,
     )

@@ -68,26 +68,31 @@ def binomial_bulk_lookup_dyn(
 def binomial_route_bulk(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     *,
     n_words: int,
+    n_slots: int,
     omega: int = 16,
-    max_chain: int = 4096,
     use_pallas: bool | None = None,
     interpret: bool = False,
     block_rows: int = 512,
 ) -> jax.Array:
     """Fused routing: keys + fleet state -> int32 replica ids, ONE dispatch.
 
-    The single-dispatch serving hot path: BinomialHash lookup and the bounded
-    Memento rejection chain run under one compiled executable (fused Pallas
-    kernel on TPU / interpret mode, fused jnp jit elsewhere) — no
-    intermediate ``buckets[N]`` HBM round-trip, and every fleet-state operand
-    is traced so scale/fail/recover streams never retrace.
+    The single-dispatch serving hot path: BinomialHash lookup and the
+    replacement-table failure divert run under one compiled executable
+    (fused Pallas kernel on TPU / interpret mode, fused jnp jit elsewhere) —
+    no intermediate ``buckets[N]`` HBM round-trip, every fleet-state operand
+    is traced so scale/fail/recover streams never retrace, and the divert is
+    two bounded hash rounds + ONE table gather per lane so an event storm
+    never shows up on the batch critical path (DESIGN.md §7).
 
     packed_mask  (1, W) u32 removed-slot bit-words (``pack_removed_mask``)
-    state        (2,) u32 ``[n_total, first_alive]``
-    n_words      static payload word count (= ceil(capacity/32))
+    table        (1, C) i32 slots permutation (``pack_table``)
+    state        (2,) u32 ``[n_total, n_alive]``
+    n_words      static mask word count (= ceil(capacity/32))
+    n_slots      static table slot count (= capacity)
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -95,13 +100,70 @@ def binomial_route_bulk(
         return binomial_route_pallas_fused(
             keys,
             packed_mask,
+            table,
             state,
             n_words,
+            n_slots,
             omega=omega,
-            max_chain=max_chain,
             block_rows=block_rows,
             interpret=interpret,
         )
     return binomial_memento_route(
-        keys, packed_mask, state, omega=omega, max_chain=max_chain
+        keys, packed_mask, table, state, omega=omega, n_words=n_words
     )
+
+
+def make_sharded_route(
+    mesh,
+    axis_name: str = "data",
+    *,
+    n_words: int,
+    n_slots: int,
+    omega: int = 16,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_rows: int = 512,
+    donate_keys: bool = False,
+):
+    """Build the mesh-sharded bulk routing callable (DESIGN.md §8).
+
+    Returns ``route(keys, packed_mask, table, state) -> replica ids`` where
+     1-D ``keys`` are split along ``mesh``'s ``axis_name`` (length must be a
+    multiple of the axis size — the caller pads) and the three fleet-state
+    operands are replicated on every device.  Each device runs the fused
+    single-dispatch datapath on its shard — zero cross-device collectives,
+    zero per-batch host round-trips — so multi-device hosts scale routed
+    keys/s with the device count.  The whole thing is ONE jitted executable
+    (``shard_map`` under ``jit``); all fleet state stays traced, so
+    scale/fail/recover event streams never retrace.
+
+    ``donate_keys=True`` donates the key buffer to the executable (the
+    caller must not reuse it) — the serving tier enables this for key
+    batches it uploads itself, making the sharded hot path allocation-free
+    on the input side.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import shard_map_compat
+
+    def inner(keys, packed_mask, table, state):
+        return binomial_route_bulk(
+            keys,
+            packed_mask,
+            table,
+            state,
+            n_words=n_words,
+            n_slots=n_slots,
+            omega=omega,
+            use_pallas=use_pallas,
+            interpret=interpret,
+            block_rows=block_rows,
+        )
+
+    sharded = shard_map_compat(
+        inner,
+        mesh,
+        in_specs=(P(axis_name), P(), P(), P()),
+        out_specs=P(axis_name),
+    )
+    return jax.jit(sharded, donate_argnums=(0,) if donate_keys else ())

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binomial_jax import _unrolled_body
-from repro.core.memento_jax import _route_fused_impl
+from repro.core.memento_jax import _route_table_impl
 
 
 def binomial_bulk_lookup_ref(keys: jax.Array, n: int, omega: int = 16) -> jax.Array:
@@ -30,19 +30,24 @@ def binomial_bulk_lookup_ref(keys: jax.Array, n: int, omega: int = 16) -> jax.Ar
 def binomial_route_ref(
     keys: jax.Array,
     packed_mask: jax.Array,
+    table: jax.Array,
     state: jax.Array,
     omega: int = 16,
-    max_chain: int = 4096,
+    n_words: int | None = None,
 ) -> jax.Array:
-    """Fused lookup + Memento remap oracle (same math as the fused kernel).
+    """Fused lookup + table divert oracle (same math as the fused kernel).
 
     keys         any int shape; packed_mask (1, W) u32 bit-words;
-    state        (2,) u32 [n_total, first_alive].
+    table        (1, C) i32 slots permutation; state (2,) u32 [n_total, n_alive];
+    n_words      static mask word count (defaults to the full padded width —
+                 slower cascade, fine for an eager test oracle).
     """
-    return _route_fused_impl(
+    packed_mask = jnp.asarray(packed_mask, jnp.uint32)
+    return _route_table_impl(
         jnp.asarray(keys),
-        jnp.asarray(packed_mask, jnp.uint32),
+        packed_mask,
+        jnp.asarray(table, jnp.int32),
         jnp.asarray(state, jnp.uint32),
         omega,
-        max_chain,
+        int(packed_mask.shape[1]) if n_words is None else n_words,
     )

@@ -62,6 +62,10 @@ class FailureDomain:
     whole lookup+remap path u32 — the word size of the batched device
     datapath (``repro.serving.batch_router.BatchRouter``), which mirrors
     this domain's state on device bit-exactly.
+
+    ``resolve="table"`` switches failure resolution from the rejection
+    chain to the constant-time replacement table (DESIGN.md §7) — the
+    semantics the batched device datapath implements.
     """
 
     def __init__(
@@ -71,6 +75,7 @@ class FailureDomain:
         chain_bits: int = 64,
         omega: int | None = None,
         max_chain: int = 4096,
+        resolve: str = "chain",
     ):
         def factory(m: int):
             eng = make(engine, m)
@@ -80,7 +85,9 @@ class FailureDomain:
                 eng.omega = omega
             return eng
 
-        self._eng = MementoWrapper(factory, n, max_chain=max_chain, chain_bits=chain_bits)
+        self._eng = MementoWrapper(
+            factory, n, max_chain=max_chain, chain_bits=chain_bits, resolve=resolve
+        )
 
     @property
     def alive_count(self) -> int:
@@ -97,6 +104,14 @@ class FailureDomain:
 
     def first_alive(self) -> int:
         return self._eng.first_alive()
+
+    @property
+    def replacement_table(self):
+        """The ``ReplacementTable`` (``resolve="table"`` domains only) —
+        the host truth the device copies are uploaded from."""
+        if self._eng.table is None:
+            raise ValueError("domain was not constructed with resolve='table'")
+        return self._eng.table
 
     def locate(self, key: int) -> int:
         return self._eng.get_bucket(key)

@@ -1,29 +1,42 @@
-"""Batched, recompile-free session routing — the serving-tier datapath.
+"""Batched, recompile-free, storm-proof session routing — the serving-tier
+datapath.
 
 ``SessionRouter`` routes one session at a time through scalar Python
 (``FailureDomain.locate``); fine for a control plane, hopeless for a serving
 tier taking millions of lookups per second.  ``BatchRouter`` embeds a u32
-``SessionRouter`` (binomial32 base engine + u32 Memento chain) as its
-control plane — scalar lookups, stats and fleet-event bookkeeping all live
-there — and routes whole key batches on device in ONE dispatch (DESIGN.md §3):
+``SessionRouter`` (binomial32 base engine + replacement-table failure
+resolution) as its control plane — scalar lookups, stats and fleet-event
+bookkeeping all live there — and routes whole key batches on device in ONE
+dispatch (DESIGN.md §3, §7):
 
-    keys[N] --binomial_route_bulk--> replicas[N]     (fused lookup + remap)
+    keys[N] --binomial_route_bulk--> replicas[N]   (fused lookup + divert)
 
 The fused kernel takes the fleet state as *traced*, *device-resident*
-operands — ``[n_total, first_alive]`` as a scalar-prefetch/SMEM 2-vector,
-the removed-slot set as a fixed-shape packed bit-table in VMEM — so an
-arbitrary stream of scale-up / scale-down / fail / recover events re-uses
-one compiled executable per batch shape: zero retraces, which is exactly the
-paper's constant-time guarantee carried through to the compiled datapath.
-Fleet events update the device copies incrementally (a one-word bit flip +
-``jax.device_put`` of a few hundred bytes, event-time only); ``route_keys``
-itself performs zero host->device state uploads and zero host round-trips —
-it accepts and returns ``jax.Array`` (``route_keys_np`` / ``route_batch``
-are the numpy convenience wrappers).
+operands — ``[n_total, n_alive]`` as a scalar-prefetch/SMEM 2-vector, the
+removed-slot set as a fixed-shape packed bit-table, and the MementoHash-
+style replacement table (``(1, capacity)`` i32 — the ``slots``
+permutation; ``pos`` stays host-side) in VMEM —
+so an arbitrary stream of scale-up / scale-down / fail / recover events
+re-uses one compiled executable per batch shape: zero retraces.  Removed
+buckets resolve through AT MOST TWO bounded table gathers instead of a
+data-dependent rejection walk, so an event storm costs the same per batch
+as a healthy fleet — the paper's constant-time guarantee carried through
+the compiled datapath *including* its failure path.  Fleet events update
+the device copies incrementally (a one-word bit flip + permutation swap on
+the host mirrors, then a few-KiB ``jax.device_put``, event-time only);
+``route_keys`` itself performs zero host->device state uploads and zero
+host round-trips — it accepts and returns ``jax.Array``
+(``route_keys_np`` / ``route_batch`` are the numpy convenience wrappers).
+
+Multi-device hosts hand ``BatchRouter`` a mesh: key batches are then split
+across the mesh axis under one jitted ``shard_map`` (fleet state
+replicated, per-device fused dispatch, no collectives — DESIGN.md §8) for
+near-linear keys/s scaling.  ``block_rows=None`` engages the measure-once
+persistent autotuner on Pallas backends (``repro.kernels.autotune``).
 
 The pre-fusion two-stage pipeline (``binomial_bulk_lookup_dyn`` then
-``memento_remap`` — two dispatches, ``buckets[N]`` materialised in HBM
-between them) is kept behind ``fused=False`` as the benchmark baseline.
+``memento_remap_table`` — two dispatches, ``buckets[N]`` materialised in
+HBM between them) is kept behind ``fused=False`` as the benchmark baseline.
 
 Bit-exactness (enforced by tests): for every key, the device path returns
 exactly what the embedded scalar router's ``domain.locate`` returns — the
@@ -35,8 +48,19 @@ import jax
 import numpy as np
 
 from repro.core import bits
-from repro.core.memento_jax import mask_words, memento_remap, pack_removed_mask
-from repro.kernels.ops import binomial_bulk_lookup_dyn, binomial_route_bulk
+from repro.core.memento_jax import (
+    mask_words,
+    memento_remap_table,
+    pack_removed_mask,
+    pack_table,
+)
+from repro.kernels import autotune
+from repro.kernels.binomial_hash import LANES
+from repro.kernels.ops import (
+    binomial_bulk_lookup_dyn,
+    binomial_route_bulk,
+    make_sharded_route,
+)
 from repro.serving.router import SessionRouter
 
 
@@ -51,18 +75,58 @@ class BatchRouter:
         max_chain: int = 4096,
         use_pallas: bool | None = None,
         interpret: bool = False,
-        block_rows: int = 512,
+        block_rows: int | None = None,
         fused: bool = True,
+        mesh=None,
+        shard_axis: str = "data",
+        donate_keys: bool = False,
     ):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         if capacity is None:
             capacity = max(64, bits.next_pow2(2 * n_replicas))
+        if capacity < 1 or capacity & (capacity - 1):
+            raise ValueError(
+                f"capacity must be a power of two (got {capacity}); the packed "
+                "mask words and table lanes tile evenly only at pow2 capacities"
+            )
         if n_replicas > capacity:
             raise ValueError(f"n_replicas ({n_replicas}) exceeds capacity ({capacity})")
-        # control-plane truth: u32 engine + u32 chain (the device word size);
-        # omega/max_chain mirror the device operands so scalar == batch holds
-        # for non-default values too
+        if max_chain < 0:
+            raise ValueError(
+                f"max_chain must be >= 0, got {max_chain}; note the table "
+                "resolution has a hard two-redirect bound, so max_chain only "
+                "labels the (unused) chain budget — any value >= 0 routes "
+                "identically"
+            )
+        if block_rows is not None and (block_rows <= 0 or block_rows % 8):
+            raise ValueError(
+                f"block_rows must be a positive multiple of 8 (the i32 sublane "
+                f"tile), got {block_rows}; pass None to autotune"
+            )
+        if mesh is not None and not fused:
+            raise ValueError(
+                "the two-pass baseline (fused=False) is single-host only; "
+                "the mesh-sharded datapath always runs the fused kernel"
+            )
+        if donate_keys and mesh is None:
+            raise ValueError(
+                "donate_keys applies to the mesh-sharded datapath only; "
+                "pass a mesh or drop donate_keys"
+            )
+        # control-plane truth: u32 engine + u32 table resolution (the device
+        # semantics); omega mirrors the device operand so scalar == batch
+        # holds for non-default values too.  max_chain is INERT under table
+        # resolution (hard two-redirect bound) — accepted and validated for
+        # API stability with the chain-mode library flavour, forwarded only
+        # so the control plane would stay bit-exact if flipped to chain mode.
         self.scalar = SessionRouter(
-            n_replicas, engine="binomial32", chain_bits=32, omega=omega, max_chain=max_chain
+            n_replicas,
+            engine="binomial32",
+            chain_bits=32,
+            omega=omega,
+            max_chain=max_chain,
+            resolve="table",
         )
         self.capacity = capacity
         self.n_words = mask_words(capacity)
@@ -72,18 +136,27 @@ class BatchRouter:
         self.interpret = interpret
         self.block_rows = block_rows
         self.fused = fused
-        # canonical host mirror of the removed set (packed bit-words),
-        # mutated incrementally on fleet events
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.donate_keys = donate_keys
+        self._n_shards = 1 if mesh is None else int(mesh.shape[shard_axis])
+        #: per-batch-rows resolved block size (autotuner results memoised)
+        self._tuned_rows: dict[int, int] = {}
+        #: per-(rows, block_rows) jitted sharded executables (mesh mode)
+        self._sharded_route: dict[int, object] = {}
+        # canonical host mirrors of the device fleet state, mutated
+        # incrementally on fleet events
         self._packed_host = pack_removed_mask((), capacity)
+        self._table_host = pack_table(self.domain.replacement_table, capacity)
         # device-resident fleet state: pinned once here, then refreshed only
         # on fleet events — never rebuilt or re-uploaded per batch.  Only the
         # operands the selected datapath reads are maintained: packed words +
-        # state 2-vector (fused), bool mask + split scalars (two-pass).
+        # table + state 2-vector (fused and two-pass remap), n scalar
+        # (two-pass lookup).
         self._packed_dev: jax.Array | None = None
-        self._mask_dev: jax.Array | None = None
+        self._table_dev: jax.Array | None = None
         self._state_dev: jax.Array | None = None
         self._n_dev: jax.Array | None = None
-        self._fa_dev: jax.Array | None = None
         self._resync_device_state()
 
     @property
@@ -95,36 +168,46 @@ class BatchRouter:
         return self.scalar.stats
 
     # -- device-side fleet state -------------------------------------------
+    def _device_put(self, host_array):
+        """Pin host state on device — replicated across the mesh if sharded."""
+        if self.mesh is None:
+            return jax.device_put(host_array)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(host_array, NamedSharding(self.mesh, P()))
+
     def _resync_device_state(self) -> None:
         """Rebuild the device operands from control-plane truth.
 
         Used at construction and after scale-down (which may garbage-collect
         removed-slot tombstones off the end of the slot space); fail/recover
-        take the incremental single-bit path instead.
+        take the incremental single-bit + permutation-swap path instead.
         """
         self._packed_host = pack_removed_mask(self.domain.removed, self.capacity)
-        self._put_mask()
-        self._put_scalars()
+        self._put_state()
 
-    def _put_mask(self) -> None:
-        """Re-pin the removed-slot table for the selected datapath."""
-        if self.fused:
-            self._packed_dev = jax.device_put(self._packed_host)
-        else:
-            mask = np.zeros((self.capacity,), dtype=bool)
-            removed = self.domain.removed
-            if removed:
-                mask[list(removed)] = True
-            self._mask_dev = jax.device_put(mask)
+    def _put_state(self) -> None:
+        """Re-pin every device operand of the fleet state — event-time only,
+        never per batch, and ONE ``device_put`` for the lot (a few KiB; the
+        per-call fixed cost dominates at these sizes, so batching the
+        transfers keeps fleet events well under a millisecond).
 
-    def _put_scalars(self) -> None:
-        """Re-pin [n_total, first_alive] on device (a 8-byte upload)."""
-        n, fa = self.domain.total_count, self.domain.first_alive()
+        The host ``ReplacementTable`` is updated O(1) per event by the
+        control plane; this just re-packs and re-uploads it.
+        """
+        self._table_host = pack_table(self.domain.replacement_table, self.capacity)
+        n, alive = self.domain.total_count, self.domain.alive_count
+        state_host = np.array([n, alive], dtype=np.uint32)
         if self.fused:
-            self._state_dev = jax.device_put(np.array([n, fa], dtype=np.uint32))
+            self._packed_dev, self._table_dev, self._state_dev = self._device_put(
+                (self._packed_host, self._table_host, state_host)
+            )
         else:
-            self._n_dev = jax.device_put(np.uint32(n))
-            self._fa_dev = jax.device_put(np.uint32(fa))
+            self._packed_dev, self._table_dev, self._state_dev, self._n_dev = (
+                self._device_put(
+                    (self._packed_host, self._table_host, state_host, np.uint32(n))
+                )
+            )
 
     def _set_removed_bit(self, replica: int, removed: bool) -> None:
         """Incremental fleet-event update: flip one mask bit, re-pin."""
@@ -133,8 +216,40 @@ class BatchRouter:
             self._packed_host[0, word] |= bit
         else:
             self._packed_host[0, word] &= ~bit
-        self._put_mask()
-        self._put_scalars()  # first_alive may have changed
+        self._put_state()  # the permutation swapped O(1) entries
+
+    # -- block-size resolution ----------------------------------------------
+    def _pallas_selected(self) -> bool:
+        if self.use_pallas is None:
+            return jax.default_backend() == "tpu"
+        return self.use_pallas
+
+    def _resolve_block_rows(self, rows: int) -> int:
+        """Static tiling for a batch of ``rows`` x128 keys.
+
+        Explicit ``block_rows`` wins; the jnp fallback and interpret mode
+        (a test harness, not a perf target) take the default; otherwise the
+        measure-once autotuner picks per (backend, rows, capacity) and
+        persists the verdict (DESIGN.md §7).
+        """
+        if self.block_rows is not None:
+            return self.block_rows
+        if not self._pallas_selected() or self.interpret:
+            return autotune.DEFAULT_BLOCK_ROWS
+        if rows not in self._tuned_rows:
+            probe = np.zeros((rows * LANES,), dtype=np.uint32)
+
+            def measure(candidate: int) -> None:
+                jax.block_until_ready(self._dispatch(probe, candidate))
+
+            self._tuned_rows[rows] = autotune.tuned_block_rows(
+                jax.default_backend(),
+                rows,
+                self.capacity,
+                measure,
+                variant="fused" if self.fused else "two_pass",
+            )
+        return self._tuned_rows[rows]
 
     # -- routing ------------------------------------------------------------
     session_key = staticmethod(SessionRouter.session_key)
@@ -154,49 +269,100 @@ class BatchRouter:
             return np.ascontiguousarray(keys)
         return np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
 
+    def _dispatch(self, keys_u32, block_rows: int) -> jax.Array:
+        """Single-host dispatch of one batch at a given tiling."""
+        if self.fused:
+            return binomial_route_bulk(
+                keys_u32,
+                self._packed_dev,
+                self._table_dev,
+                self._state_dev,
+                n_words=self.n_words,
+                n_slots=self.capacity,
+                omega=self.omega,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
+                block_rows=block_rows,
+            )
+        # pre-fusion two-pass pipeline (benchmark baseline): buckets[N]
+        # round-trips through HBM between two dispatches
+        buckets = binomial_bulk_lookup_dyn(
+            keys_u32,
+            self._n_dev,
+            omega=self.omega,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+            block_rows=block_rows,
+        )
+        return memento_remap_table(
+            keys_u32,
+            buckets,
+            self._packed_dev,
+            self._table_dev,
+            self._state_dev,
+            n_words=self.n_words,
+        )
+
+    def _route_sharded(self, keys_u32, block_rows: int) -> jax.Array:
+        """Mesh-sharded dispatch: keys split over the mesh axis, fleet state
+        replicated, ONE jitted shard_map executable (DESIGN.md §8)."""
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        shape = keys_u32.shape
+        flat = keys_u32.reshape(-1)
+        total = flat.shape[0]
+        pad = (-total) % self._n_shards
+        owned = not isinstance(keys_u32, jax.Array)  # we upload -> we may donate
+        if pad:
+            flat = (np.pad if isinstance(flat, np.ndarray) else jnp.pad)(flat, (0, pad))
+            owned = True
+        if isinstance(flat, np.ndarray):
+            # upload already sharded along the mesh axis — the executable
+            # never has to re-lay it out, and the buffer is ours to donate
+            flat = jax.device_put(flat, NamedSharding(self.mesh, P(self.shard_axis)))
+        route = self._sharded_route.get(block_rows)
+        if route is None:
+            route = make_sharded_route(
+                self.mesh,
+                self.shard_axis,
+                n_words=self.n_words,
+                n_slots=self.capacity,
+                omega=self.omega,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
+                block_rows=block_rows,
+                donate_keys=self.donate_keys,
+            )
+            self._sharded_route[block_rows] = route
+        if self.donate_keys and not owned:
+            # donation consumes the buffer; never consume one the caller owns
+            flat = jnp.asarray(flat).copy()
+        out = route(flat, self._packed_dev, self._table_dev, self._state_dev)
+        if pad:
+            out = out[:total]
+        return out.reshape(shape)
+
     def route_keys(self, keys) -> jax.Array:
         """Pre-hashed keys (any int array) -> int32 replica ids, on device.
 
-        The hot path: ONE device dispatch (fused lookup + remap kernel), no
-        host round-trip — input ``jax.Array``s stay on device and the result
-        is returned as a ``jax.Array`` without synchronising.  Keys are
+        The hot path: ONE device dispatch (fused lookup + table divert
+        kernel; one jitted shard_map over the mesh when sharded), no host
+        round-trip — input ``jax.Array``s stay on device and the result is
+        returned as a ``jax.Array`` without synchronising.  Keys are
         truncated to u32, identical to what the scalar u32 oracle
-        (``binomial_lookup32`` / the u32 Memento chain) does with wide keys.
-        Skips per-session movement bookkeeping; use ``route_batch`` for
-        session-level observability, ``route_keys_np`` for a numpy result.
+        (``binomial_lookup32`` / the u32 table resolution) does with wide
+        keys.  Skips per-session movement bookkeeping; use ``route_batch``
+        for session-level observability, ``route_keys_np`` for numpy.
         """
         keys_u32 = self._coerce_keys(keys)
-        if self.fused:
-            out = binomial_route_bulk(
-                keys_u32,
-                self._packed_dev,
-                self._state_dev,
-                n_words=self.n_words,
-                omega=self.omega,
-                max_chain=self.max_chain,
-                use_pallas=self.use_pallas,
-                interpret=self.interpret,
-                block_rows=self.block_rows,
-            )
+        rows = -(-int(np.size(keys_u32)) // LANES)
+        # tune for what one device actually sees: the per-shard row count
+        block_rows = self._resolve_block_rows(-(-rows // self._n_shards))
+        if self.mesh is not None:
+            out = self._route_sharded(keys_u32, block_rows)
         else:
-            # pre-fusion two-pass pipeline (benchmark baseline): buckets[N]
-            # round-trips through HBM between two dispatches
-            buckets = binomial_bulk_lookup_dyn(
-                keys_u32,
-                self._n_dev,
-                omega=self.omega,
-                use_pallas=self.use_pallas,
-                interpret=self.interpret,
-                block_rows=self.block_rows,
-            )
-            out = memento_remap(
-                keys_u32,
-                buckets,
-                self._mask_dev,
-                self._n_dev,
-                self._fa_dev,
-                max_chain=self.max_chain,
-            )
+            out = self._dispatch(keys_u32, block_rows)
         self.stats.lookups += int(np.size(keys_u32))
         return out
 
@@ -222,9 +388,10 @@ class BatchRouter:
         return self.scalar.route(session_id)
 
     # -- fleet events --------------------------------------------------------
-    # Each event mutates the scalar control plane, then refreshes the device
-    # state: fail/recover flip one bit incrementally; scale-up touches only
-    # the scalar 2-vector; scale-down resyncs (tombstone GC can clear bits).
+    # Each event mutates the scalar control plane (removed set + O(1)
+    # replacement-table swaps), then refreshes the device state: fail/recover
+    # flip one bit + re-pin the few-KiB table; scale-up re-pins table +
+    # scalars; scale-down resyncs (tombstone GC can clear bits).
     def scale_up(self) -> int:
         if self.domain.total_count >= self.capacity:
             raise ValueError(
@@ -232,7 +399,7 @@ class BatchRouter:
                 "construct BatchRouter with a larger capacity"
             )
         r = self.scalar.scale_up()
-        self._put_scalars()
+        self._put_state()
         return r
 
     def scale_down(self) -> int:

@@ -3,11 +3,12 @@
 Each ``Replica`` owns model params and serves aligned batches: prefill the
 batch of prompts, then decode step-by-step (greedy).  The ``ServingTier``
 composes replicas with the BinomialHash ``BatchRouter``: the whole request
-batch is routed in ONE device dispatch (the fused lookup+remap kernel over
-device-resident fleet state, DESIGN.md §3), grouped by routed replica, each
-replica serves its group, and fleet events (fail/recover/scale) only disturb
-the sessions the paper's guarantees say they may — and never recompile or
-re-upload the routing datapath.
+batch is routed in ONE device dispatch (the fused lookup + replacement-table
+divert kernel over device-resident fleet state, DESIGN.md §3/§7; handed a
+``mesh``, one sharded dispatch across local devices, §8), grouped by routed
+replica, each replica serves its group, and fleet events
+(fail/recover/scale) only disturb the sessions the paper's guarantees say
+they may — and never recompile or re-upload the routing datapath.
 """
 from __future__ import annotations
 
@@ -52,10 +53,20 @@ class Request:
 
 
 class ServingTier:
-    def __init__(self, cfg: ArchConfig, params, n_replicas: int, max_len: int = 64):
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        n_replicas: int,
+        max_len: int = 64,
+        mesh=None,
+        shard_axis: str = "data",
+    ):
         self.cfg = cfg
         self.max_len = max_len
-        self.router = BatchRouter(n_replicas)
+        # a mesh shards the routing datapath across local devices (keys
+        # split over ``shard_axis``, fleet state replicated — DESIGN.md §8)
+        self.router = BatchRouter(n_replicas, mesh=mesh, shard_axis=shard_axis)
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
 
     def serve(self, requests: list[Request]) -> dict[str, np.ndarray]:

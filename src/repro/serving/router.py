@@ -11,14 +11,16 @@ Two tiers share this architecture:
 
 * ``SessionRouter`` (this module) — the scalar control plane: one Python
   lookup per call through ``FailureDomain.locate``.  With
-  ``engine="binomial32", chain_bits=32`` it is the bit-exact oracle for the
-  batched datapath.
+  ``engine="binomial32", chain_bits=32, resolve="table"`` it is the
+  bit-exact oracle for the batched datapath (``resolve="chain"`` keeps the
+  paper-faithful rejection-chain flavour for library use).
 * ``BatchRouter`` (``repro.serving.batch_router``) — the device datapath:
-  whole request batches flow through the dynamic-n Pallas kernel
-  (``binomial_bulk_lookup_dyn``, cluster size as a scalar-prefetch operand)
-  and the vectorised Memento failure remap (``memento_remap``, removed-slot
-  table as a fixed-capacity device array).  Fleet events mutate only small
-  traced operands, so scale/fail streams never retrace or recompile.
+  whole request batches flow through the fused lookup+divert kernel
+  (cluster size as a scalar-prefetch operand, removed-slot mask and
+  replacement table as fixed-capacity device arrays — DESIGN.md §3, §7).
+  Fleet events mutate only small traced operands, so scale/fail streams
+  never retrace or recompile, and the bounded table divert keeps storm-time
+  batch cost equal to steady-time cost.
 
 ``ServingTier`` routes with the batched tier and falls back to the scalar
 path for single lookups; both agree key-for-key by construction.
@@ -46,9 +48,15 @@ class SessionRouter:
         chain_bits: int = 64,
         omega: int | None = None,
         max_chain: int = 4096,
+        resolve: str = "chain",
     ):
         self.domain = FailureDomain(
-            n_replicas, engine, chain_bits=chain_bits, omega=omega, max_chain=max_chain
+            n_replicas,
+            engine,
+            chain_bits=chain_bits,
+            omega=omega,
+            max_chain=max_chain,
+            resolve=resolve,
         )
         self.stats = RoutingStats()
         self._last: dict[int, int] = {}  # session -> replica (observability only)

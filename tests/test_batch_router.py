@@ -8,7 +8,7 @@ import pytest
 from repro.core import MementoWrapper, make
 from repro.core.binomial import binomial_lookup32
 from repro.core.binomial_jax import binomial_lookup_dyn
-from repro.core.memento_jax import memento_remap
+from repro.core.memento_jax import memento_remap, memento_remap_table
 from repro.kernels.binomial_hash import (
     binomial_bulk_lookup_dyn_2d,
     binomial_bulk_lookup_pallas,
@@ -141,9 +141,9 @@ EVENTS = [
 
 
 def test_batch_router_matches_scalar_session_router():
-    """Key-for-key parity with SessionRouter(binomial32, u32 chain)."""
+    """Key-for-key parity with SessionRouter(binomial32, table resolve)."""
     batch = BatchRouter(8)
-    scalar = SessionRouter(8, engine="binomial32", chain_bits=32)
+    scalar = SessionRouter(8, engine="binomial32", chain_bits=32, resolve="table")
     sessions = [f"user-{i}" for i in range(500)]
     np.testing.assert_array_equal(
         batch.route_batch(sessions), [scalar.route(s) for s in sessions]
@@ -210,14 +210,14 @@ def test_batch_router_1m_keys_zero_retrace_acceptance():
 
     router = BatchRouter(8, interpret=True)  # force the fused Pallas kernel (CPU)
     two_pass = BatchRouter(8, interpret=True, fused=False)
-    scalar = SessionRouter(8, engine="binomial32", chain_bits=32)
+    scalar = SessionRouter(8, engine="binomial32", chain_bits=32, resolve="table")
     keys = RNG.integers(0, 2**64, size=(1 << 20,), dtype=np.uint64)
 
     router.route_keys(keys)  # compile once
     two_pass.route_keys(keys)
     fused_before = binomial_route_fused_2d._cache_size()
     kernel_before = binomial_bulk_lookup_dyn_2d._cache_size()
-    remap_before = memento_remap._cache_size()
+    remap_before = memento_remap_table._cache_size()
 
     sample = RNG.choice(len(keys), size=512, replace=False)
     assert len(EVENTS) >= 8
@@ -235,7 +235,7 @@ def test_batch_router_1m_keys_zero_retrace_acceptance():
 
     assert binomial_route_fused_2d._cache_size() == fused_before
     assert binomial_bulk_lookup_dyn_2d._cache_size() == kernel_before
-    assert memento_remap._cache_size() == remap_before
+    assert memento_remap_table._cache_size() == remap_before
 
 
 # ---------------------------------------------------------------------------

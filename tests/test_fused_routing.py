@@ -1,15 +1,17 @@
 """Fused single-dispatch routing kernel + device-resident BatchRouter state:
-bit-exactness vs the scalar SessionRouter oracle, the one-dispatch-per-batch
-guarantee, and zero retraces / zero state re-uploads across fleet events."""
+bit-exactness vs the scalar SessionRouter oracle (table resolution — the
+serving-datapath semantics), the one-dispatch-per-batch guarantee, and zero
+retraces / zero state re-uploads across fleet events."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.binomial_jax import umod32
+from repro.core.binomial_jax import mulhi32, umod32
 from repro.core.memento_jax import (
     binomial_memento_route,
     mask_words,
     pack_removed_mask,
+    pack_table,
 )
 from repro.kernels import ops
 from repro.kernels.binomial_hash import (
@@ -24,15 +26,22 @@ from repro.serving.router import SessionRouter
 RNG = np.random.default_rng(7)
 
 
+def _oracle(n, **kw):
+    """The scalar oracle of the device datapath: u32 engine + table resolve."""
+    return SessionRouter(n, engine="binomial32", chain_bits=32, resolve="table", **kw)
+
+
 def _oracle_state(router: SessionRouter, capacity: int = 64):
     dom = router.domain
     packed = pack_removed_mask(dom.removed, capacity)
-    state = np.array([dom.total_count, dom.first_alive()], np.uint32)
-    return packed, state
+    table = pack_table(dom.replacement_table, capacity)
+    state = np.array([dom.total_count, dom.alive_count], np.uint32)
+    return packed, table, state
 
 
 # ---------------------------------------------------------------------------
-# divide-free modulo (the in-kernel chain step building block)
+# divide-free building blocks (umod32 for the chain remap, mulhi32 for the
+# table divert's Lemire range reduction)
 # ---------------------------------------------------------------------------
 
 
@@ -41,6 +50,22 @@ def test_umod32_matches_native_mod(n):
     x = RNG.integers(0, 2**32, size=(2048,), dtype=np.uint32)
     out = np.asarray(umod32(jnp.asarray(x), np.uint32(n)))
     np.testing.assert_array_equal(out, x % np.uint32(n))
+
+
+def test_mulhi32_matches_u64_reference():
+    a = RNG.integers(0, 2**32, size=(4096,), dtype=np.uint32)
+    b = RNG.integers(0, 2**32, size=(4096,), dtype=np.uint32)
+    ref = ((a.astype(np.uint64) * b.astype(np.uint64)) >> 32).astype(np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(mulhi32(jnp.asarray(a), jnp.asarray(b))), ref
+    )
+    # edge operands: 0, 1, 2^31, 2^32-1
+    e = np.array([0, 1, 1 << 31, (1 << 32) - 1], dtype=np.uint32)
+    ee = np.stack(np.meshgrid(e, e)).reshape(2, -1)
+    ref = ((ee[0].astype(np.uint64) * ee[1].astype(np.uint64)) >> 32).astype(np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(mulhi32(jnp.asarray(ee[0]), jnp.asarray(ee[1]))), ref
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -55,15 +80,16 @@ def test_fused_kernel_pow2_boundaries(k, delta):
     n = (1 << k) + delta
     if n < 2:
         pytest.skip("n < 2 is the degenerate single-bucket case")
-    oracle = SessionRouter(n, engine="binomial32", chain_bits=32)
+    oracle = _oracle(n)
     if n > 2:
         oracle.fail(n // 2)
-    packed, state = _oracle_state(oracle)
+    packed, table, state = _oracle_state(oracle)
     keys = RNG.integers(0, 2**32, size=(512,), dtype=np.uint32)
     out = np.asarray(
         binomial_route_pallas_fused(
-            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(state),
-            n_words=mask_words(64), interpret=True, block_rows=2,
+            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(table),
+            jnp.asarray(state),
+            n_words=mask_words(64), n_slots=64, interpret=True, block_rows=2,
         )
     )
     expect = [oracle.domain.locate(int(x)) for x in keys]
@@ -72,8 +98,8 @@ def test_fused_kernel_pow2_boundaries(k, delta):
 
 def test_fused_kernel_randomized_fail_recover_stream():
     """The fused kernel tracks the oracle through a random event stream."""
-    router = BatchRouter(16, interpret=True, block_rows=2)
-    oracle = SessionRouter(16, engine="binomial32", chain_bits=32)
+    router = BatchRouter(16, interpret=True, block_rows=8)
+    oracle = _oracle(16)
     keys = RNG.integers(0, 2**64, size=(2048,), dtype=np.uint64)
     rng = np.random.default_rng(5)
     for _ in range(15):
@@ -100,22 +126,25 @@ def test_fused_kernel_randomized_fail_recover_stream():
 
 def test_fused_paths_agree_with_ref_and_two_pass():
     """pallas(interpret) == jnp jit == unjitted ref == two-pass BatchRouter."""
-    oracle = SessionRouter(12, engine="binomial32", chain_bits=32)
+    oracle = _oracle(12)
     for r in (1, 4, 9):
         oracle.fail(r)
-    packed, state = _oracle_state(oracle)
+    packed, table, state = _oracle_state(oracle)
     keys = RNG.integers(0, 2**32, size=(4096,), dtype=np.uint32)
     kj = jnp.asarray(keys)
     fused_pl = np.asarray(
         binomial_route_pallas_fused(
-            kj, jnp.asarray(packed), jnp.asarray(state),
-            n_words=mask_words(64), interpret=True, block_rows=4,
+            kj, jnp.asarray(packed), jnp.asarray(table), jnp.asarray(state),
+            n_words=mask_words(64), n_slots=64, interpret=True, block_rows=4,
         )
     )
     fused_jnp = np.asarray(
-        binomial_memento_route(kj, jnp.asarray(packed), jnp.asarray(state))
+        binomial_memento_route(
+            kj, jnp.asarray(packed), jnp.asarray(table), jnp.asarray(state),
+            n_words=mask_words(64),
+        )
     )
-    ref = np.asarray(binomial_route_ref(kj, packed, state))
+    ref = np.asarray(binomial_route_ref(kj, packed, table, state))
     two_pass = BatchRouter(12, fused=False)
     for r in (1, 4, 9):
         two_pass.fail(r)
@@ -124,19 +153,21 @@ def test_fused_paths_agree_with_ref_and_two_pass():
     np.testing.assert_array_equal(fused_pl, two_pass.route_keys_np(keys))
 
 
-def test_fused_multiword_mask_cascade():
-    """capacity > 32 exercises the multi-word select cascade in the kernel."""
+def test_fused_multiword_mask_and_table_cascade():
+    """capacity > 32 exercises the multi-word mask cascade AND the deep
+    (two-redirect) branch of the table gather cascade in the kernel."""
     cap = 256
-    oracle = SessionRouter(100, engine="binomial32", chain_bits=32)
+    oracle = _oracle(100)
     for r in (0, 31, 32, 63, 64, 95, 97):
         oracle.fail(r)
-    packed, state = _oracle_state(oracle, capacity=cap)
+    packed, table, state = _oracle_state(oracle, capacity=cap)
     assert mask_words(cap) == 8
     keys = RNG.integers(0, 2**32, size=(1024,), dtype=np.uint32)
     out = np.asarray(
         binomial_route_pallas_fused(
-            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(state),
-            n_words=mask_words(cap), interpret=True, block_rows=2,
+            jnp.asarray(keys), jnp.asarray(packed), jnp.asarray(table),
+            jnp.asarray(state),
+            n_words=mask_words(cap), n_slots=cap, interpret=True, block_rows=2,
         )
     )
     expect = [oracle.domain.locate(int(x)) for x in keys]
@@ -179,7 +210,7 @@ def test_route_keys_is_exactly_one_dispatch_per_batch(monkeypatch):
     monkeypatch.setattr(ops, "binomial_bulk_lookup_pallas_dyn", forbidden)
     monkeypatch.setattr(ops, "binomial_lookup_dyn", forbidden)
     monkeypatch.setattr(br_mod, "binomial_bulk_lookup_dyn", forbidden)
-    monkeypatch.setattr(br_mod, "memento_remap", forbidden)
+    monkeypatch.setattr(br_mod, "memento_remap_table", forbidden)
 
     before = binomial_route_fused_2d._cache_size()
     n_batches = 0
@@ -196,17 +227,19 @@ def test_route_keys_zero_per_batch_state_uploads():
     same buffers — no per-batch host->device rebuild/upload."""
     router = BatchRouter(8, interpret=True, block_rows=8)
     keys = RNG.integers(0, 2**64, size=(2048,), dtype=np.uint64)
-    packed, state = router._packed_dev, router._state_dev
+    packed, table, state = router._packed_dev, router._table_dev, router._state_dev
     for _ in range(3):
         router.route_keys(keys)
         assert router._packed_dev is packed
+        assert router._table_dev is table
         assert router._state_dev is state
     router.fail(3)  # event: state may be re-pinned...
-    packed, state = router._packed_dev, router._state_dev
-    assert packed is not None and state is not None
+    packed, table, state = router._packed_dev, router._table_dev, router._state_dev
+    assert packed is not None and table is not None and state is not None
     for _ in range(3):  # ...but batches still don't touch it
         router.route_keys(keys)
         assert router._packed_dev is packed
+        assert router._table_dev is table
         assert router._state_dev is state
 
 
@@ -228,9 +261,10 @@ def test_route_keys_jax_in_jax_out():
 
 def test_fail_last_slot_is_lifo_removal_not_stale_bit():
     """Failing the last slot shrinks the slot space in the control plane;
-    the device mask must not keep a stale bit that poisons a later scale-up."""
-    router = BatchRouter(8, interpret=True, block_rows=2)
-    oracle = SessionRouter(8, engine="binomial32", chain_bits=32)
+    the device mask/table must not keep stale entries that poison a later
+    scale-up."""
+    router = BatchRouter(8, interpret=True, block_rows=8)
+    oracle = _oracle(8)
     keys = RNG.integers(0, 2**64, size=(1024,), dtype=np.uint64)
     for ev in (("fail", 7), ("scale_up", None), ("fail", 3), ("fail", 7)):
         getattr(router, ev[0])(*(() if ev[1] is None else (ev[1],)))
@@ -248,3 +282,51 @@ def test_coerce_keys_skips_redundant_conversions():
     assert router._coerce_keys(kdev) is kdev  # no host round-trip at all
     wide = RNG.integers(0, 2**64, size=64, dtype=np.uint64)
     np.testing.assert_array_equal(router._coerce_keys(wide), wide.astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# constructor validation (clear errors at construction, not deep in a trace)
+# ---------------------------------------------------------------------------
+
+
+def test_batch_router_rejects_bad_block_rows():
+    with pytest.raises(ValueError, match="multiple of 8"):
+        BatchRouter(8, block_rows=12)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        BatchRouter(8, block_rows=0)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        BatchRouter(8, block_rows=-8)
+    BatchRouter(8, block_rows=8)  # the smallest legal tiling
+
+
+def test_batch_router_rejects_bad_max_chain():
+    with pytest.raises(ValueError, match="max_chain must be >= 0"):
+        BatchRouter(8, max_chain=-1)
+    BatchRouter(8, max_chain=0)  # zero is a legal (degenerate) budget
+
+
+def test_batch_router_rejects_non_pow2_capacity():
+    with pytest.raises(ValueError, match="power of two"):
+        BatchRouter(8, capacity=48)
+    with pytest.raises(ValueError, match="power of two"):
+        BatchRouter(8, capacity=0)
+    BatchRouter(8, capacity=16)
+
+
+def test_batch_router_rejects_bad_n_replicas():
+    with pytest.raises(ValueError, match="n_replicas"):
+        BatchRouter(0)
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        BatchRouter(100, capacity=64)
+
+
+def test_batch_router_rejects_meaningless_mesh_combinations():
+    """fused=False and donate_keys are sharded-vs-single-host specific —
+    silently ignoring them would invalidate benchmark comparisons."""
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="single-host only"):
+        BatchRouter(8, mesh=mesh, fused=False)
+    with pytest.raises(ValueError, match="donate_keys"):
+        BatchRouter(8, donate_keys=True)

@@ -1,0 +1,148 @@
+"""Storm-path bit-exactness property: hypothesis-driven randomized
+fail/recover/scale event streams assert the table-based device path equals
+``SessionRouter.locate`` per key — including the all-removed-but-one and
+max-removed-fraction edges — and that the ``ReplacementTable`` permutation
+invariants survive arbitrary event histories."""
+import numpy as np
+import pytest
+
+from repro.serving.batch_router import BatchRouter
+from repro.serving.router import SessionRouter
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a test dependency
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(31)
+KEYS = RNG.integers(0, 2**64, size=(512,), dtype=np.uint64)
+
+
+def _oracle(n):
+    return SessionRouter(n, engine="binomial32", chain_bits=32, resolve="table")
+
+
+def _apply_random_event(rng_val: int, kind: int, router, oracle) -> str:
+    """Interpret a raw hypothesis draw as a currently-valid fleet event."""
+    dom = router.domain
+    removed = sorted(dom.removed)
+    if kind == 0 and removed:  # recover
+        r = removed[rng_val % len(removed)]
+        router.recover(r), oracle.recover(r)
+        return f"recover({r})"
+    if kind == 1 and dom.total_count < router.capacity:  # scale_up
+        router.scale_up(), oracle.scale_up()
+        return "scale_up"
+    if kind == 2 and router.alive > 2:  # scale_down (LIFO)
+        router.scale_down(), oracle.scale_down()
+        return "scale_down"
+    if router.alive > 1:  # fail an arbitrary alive slot — LIFO edge included
+        alive = [b for b in range(dom.total_count) if b not in dom.removed]
+        r = alive[rng_val % len(alive)]
+        router.fail(r), oracle.fail(r)
+        return f"fail({r})"
+    return "noop"
+
+
+def _check_stream(n0: int, events, check_tables: bool = True):
+    """Shared checker: after EVERY event in the stream, the fused device
+    path equals the scalar oracle key-for-key (jnp mirror; the
+    interpret-mode Pallas kernel is pinned equal to the mirror elsewhere),
+    and the ReplacementTable permutation invariants hold."""
+    router = BatchRouter(n0, capacity=64)
+    oracle = _oracle(n0)
+    trail = []
+    for kind, val in events:
+        trail.append(_apply_random_event(val, kind, router, oracle))
+        out = router.route_keys_np(KEYS)
+        expect = np.array([oracle.domain.locate(int(k)) for k in KEYS])
+        np.testing.assert_array_equal(out, expect, err_msg=str(trail))
+        assert not np.isin(out, sorted(router.domain.removed)).any(), trail
+        if not check_tables:
+            continue
+        dom = router.domain
+        t = dom.replacement_table
+        n = dom.total_count
+        assert len(t.slots) == n and len(t.pos) == n
+        assert sorted(t.slots) == list(range(n))  # a permutation
+        assert all(t.slots[t.pos[s]] == s for s in range(n))  # inverse
+        assert set(t.slots[: t.n_alive]) == set(range(n)) - dom.removed
+        assert t.n_alive == dom.alive_count >= 1
+
+
+def test_seeded_event_storms_track_scalar_oracle():
+    """Deterministic fallback sweep of the property (runs even without
+    hypothesis): 20 seeded random streams over varying fleet sizes."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        n0 = int(rng.integers(2, 25))
+        events = [
+            (int(rng.integers(0, 4)), int(rng.integers(0, 2**16)))
+            for _ in range(int(rng.integers(1, 13)))
+        ]
+        _check_stream(n0, events)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        st.integers(min_value=2, max_value=24),
+        st.lists(
+            st.tuples(st.integers(0, 3), st.integers(0, 2**16)),
+            min_size=1,
+            max_size=12,
+        ),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_device_path_tracks_scalar_oracle_through_event_storms(n0, events):
+        _check_stream(n0, events)
+
+
+def test_max_removed_fraction_edge_capacity_fleet():
+    """Fill the slot space to capacity, then fail all but one — the densest
+    removed set the device table can represent."""
+    cap = 64
+    router = BatchRouter(4, capacity=cap)
+    oracle = _oracle(4)
+    for _ in range(cap - 4):
+        router.scale_up(), oracle.scale_up()
+    assert router.domain.total_count == cap
+    survivor = 17
+    rng = np.random.default_rng(3)
+    order = [b for b in range(cap - 1) if b != survivor]
+    rng.shuffle(order)
+    for b in order:  # tombstone everything but the survivor and the last slot
+        router.fail(b), oracle.fail(b)
+    assert router.alive == 2
+    out = router.route_keys_np(KEYS)
+    assert set(np.unique(out)) <= {survivor, cap - 1}
+    # failing the LAST slot is a LIFO removal that garbage-collects the whole
+    # tombstone suffix — the slot space collapses to [0, survivor]
+    router.fail(cap - 1), oracle.fail(cap - 1)
+    assert router.alive == 1
+    assert router.domain.total_count == survivor + 1
+    out = router.route_keys_np(KEYS)
+    assert (out == survivor).all()
+    # recover a random subset and re-check exactness at high removed fraction
+    for b in (3, 11, 0, 16, 8):
+        router.recover(b), oracle.recover(b)
+        out = router.route_keys_np(KEYS)
+        expect = [oracle.domain.locate(int(k)) for k in KEYS]
+        np.testing.assert_array_equal(out, expect)
+
+
+def test_single_failure_disruption_is_minimal_and_recovery_exact():
+    """Table resolution keeps the headline disruption property: one failure
+    moves only the failed slot's keys; its recovery restores them exactly."""
+    router = BatchRouter(16)
+    before = router.route_keys_np(KEYS)
+    router.fail(5)
+    after = router.route_keys_np(KEYS)
+    moved = before != after
+    assert moved.any()
+    assert (before[moved] == 5).all()  # only the victim's keys moved
+    assert (after != 5).all()
+    router.recover(5)
+    np.testing.assert_array_equal(router.route_keys_np(KEYS), before)
