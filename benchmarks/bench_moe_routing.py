@@ -1,8 +1,15 @@
 """MoE routing: BinomialHash router vs learned top-k — load balance without
-aux loss, elastic expert scaling, and routing overhead."""
+aux loss, elastic expert scaling, and routing overhead (the multi-K hash
+router is ONE broadcast-salted lookup dispatch per layer — DESIGN.md §9).
+
+``--smoke`` shrinks token counts and the expert sweep for the CI bench-smoke
+job: the full fused-K routing datapath still runs end to end, in seconds.
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +28,26 @@ def _cfg(router, E, k):
     )
 
 
-def main() -> list[list]:
+def main(argv: list[str] | None = None) -> list[list]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small sizes for CI: full routing datapath exercised, in seconds",
+    )
+    # run.py calls main() programmatically — don't inherit its sys.argv
+    args = ap.parse_args([] if argv is None else argv)
+    shape = (4, 512) if args.smoke else (16, 4096)
+    sweep = ((64, 8),) if args.smoke else ((64, 8), (128, 8), (256, 8))
+    elastic = (64,) if args.smoke else (64, 128, 256)
+    overhead_iters = 3 if args.smoke else 5
+
     rows = []
     rng = np.random.default_rng(0)
-    tokens = jnp.asarray(rng.integers(0, 150000, (16, 4096)), jnp.int32)
+    tokens = jnp.asarray(rng.integers(0, 150000, shape), jnp.int32)
+    n_tokens = shape[0] * shape[1]
 
-    for E, k in ((64, 8), (128, 8), (256, 8)):
+    for E, k in sweep:
         # hash router: balance with zero aux loss, freshly initialised
         cfg = _cfg("hash", E, k)
         eids, gates, aux = route({}, None, tokens, 5, cfg)
@@ -37,7 +58,7 @@ def main() -> list[list]:
         # learned top-k at INIT (before any balancing pressure): the contrast
         cfg2 = _cfg("topk", E, k)
         p = init_moe(jax.random.PRNGKey(0), cfg2)
-        x = jax.random.normal(jax.random.PRNGKey(1), (16, 4096, cfg2.d_model)) * 0.5
+        x = jax.random.normal(jax.random.PRNGKey(1), (*shape, cfg2.d_model)) * 0.5
         eids2, _, aux2 = route(p, x, tokens, 5, cfg2)
         c2 = np.bincount(np.asarray(eids2).reshape(-1), minlength=E)
         topk_rel_std = c2.std() / c2.mean()
@@ -53,7 +74,7 @@ def main() -> list[list]:
 
     # elastic expert scaling: movement when E grows (paper's monotonicity)
     keys = mix32(tokens.astype(jnp.uint32).reshape(-1))
-    for E in (64, 128, 256):
+    for E in elastic:
         a = np.asarray(binomial_lookup_vec(keys, E))
         b = np.asarray(binomial_lookup_vec(keys, E + 16))
         moved = float((a != b).mean())
@@ -64,11 +85,13 @@ def main() -> list[list]:
             f"moved={moved:.4f};ideal={16/(E+16):.4f};moves_only_to_new={only_new}",
         )
 
-    # routing overhead (vectorised u32 lookup on 64k tokens x top-8)
-    cfg = _cfg("hash", 256, 8)
+    # routing overhead: the full multi-K hash route — since the fused (B,S,K)
+    # router this is ONE lookup dispatch per layer, not top_k of them
+    E = sweep[-1][0]
+    cfg = _cfg("hash", E, 8)
     f = lambda: route({}, None, tokens, 5, cfg)[0].block_until_ready()
-    us = time_loop(f, 5)
-    emit("moe-route-overhead/E=256/k=8", us, f"{16*4096/(us*1e-6):.3e}_tokens_per_s")
+    us = time_loop(f, overhead_iters)
+    emit(f"moe-route-overhead/E={E}/k=8", us, f"{n_tokens/(us*1e-6):.3e}_tokens_per_s")
     rows_to_csv(
         "bench_moe_routing",
         ["E_or_E0", "k_or_E1", "hash_rel_std_or_moved", "topk_or_ideal", "extra1", "extra2"],
@@ -78,4 +101,4 @@ def main() -> list[list]:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

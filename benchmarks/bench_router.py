@@ -11,9 +11,13 @@ exists for — and (c) a storm-severity sweep at fixed removed fractions:
 * ``fused``    — the single-dispatch fused lookup+divert kernel over
   device-resident fleet state (``BatchRouter`` default).
 
-Plus a multi-device section: the mesh-sharded datapath (DESIGN.md §8) run
+Plus a multi-device section — the mesh-sharded datapath (DESIGN.md §8) run
 in a subprocess with fake host devices, so the shard_map path is exercised
-end-to-end even on a single-chip host.
+end-to-end even on a single-chip host — and an ``end_to_end`` ingest
+section: session ids in, replica ids out, comparing the vectorised ingest
+(``route_batch``: byte-matrix FNV-1a + bulk movement store, DESIGN.md §9)
+and the kernel-fused u64-id ingest (``route_ids``) against the retired
+per-session host-Python loop.
 
 Outputs: ``name,us_per_call,derived`` lines for run.py, a CSV in
 benchmarks/out/ (gitignored), and the machine-readable ``BENCH_router.json``
@@ -48,6 +52,7 @@ from repro.serving.router import SessionRouter
 N_REPLICAS = 16
 BATCH = 1 << 20  # >= 1M keys: the acceptance size for fused vs two-pass
 SCALAR_KEYS = 2000
+E2E_SESSIONS = 1 << 17  # end-to-end ingest batch (session ids, not keys)
 EVENTS = [("fail", 3), ("scale_up", None), ("recover", 3), ("scale_down", None)] * 2
 #: storm-severity sweep: fraction of the slot space tombstoned
 SEVERITIES = (0.0, 0.06, 0.25, 0.50)
@@ -57,11 +62,17 @@ def _table_router(n: int) -> SessionRouter:
     return SessionRouter(n, engine="binomial32", chain_bits=32, resolve="table")
 
 
-def _scalar_rate(router: SessionRouter, keys: np.ndarray) -> float:
-    t0 = time.perf_counter()
-    for k in keys:
-        router.domain.locate(int(k))
-    return len(keys) / (time.perf_counter() - t0)
+def _scalar_rate(router: SessionRouter, keys: np.ndarray, iters: int = 5) -> float:
+    """Best-of-``iters`` scalar lookups/s (same noise discipline as the
+    batched tiers — a single unwarmed pass swings several-fold under
+    hypervisor steal and poisons the fused/scalar ratio)."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for k in keys:
+            router.domain.locate(int(k))
+        best = min(best, time.perf_counter() - t0)
+    return len(keys) / best
 
 
 def _timed(fn, iters: int) -> float:
@@ -147,6 +158,77 @@ def _severity_sweep(keys, iters: int, fused: bool) -> dict:
         }
         for i, frac in enumerate(SEVERITIES)
     }
+
+
+def _host_loop_route_batch(router: BatchRouter, session_ids, last: dict):
+    """The PR 3 ``route_batch`` ingest, inlined verbatim: per-session scalar
+    ``session_key`` hashing plus the per-key dict bookkeeping loop.  Kept
+    here as the measured baseline the vectorised ingest replaces."""
+    keys = [router.session_key(s) for s in session_ids]
+    out = router.route_keys_np(np.array(keys, dtype=np.uint64))
+    for key, replica in zip(keys, out):
+        replica = int(replica)
+        prev = last.get(key)
+        if prev is None:
+            if len(last) < SessionRouter.LAST_MAX:
+                last[key] = replica
+            continue
+        if prev != replica:
+            router.stats.moved_sessions += 1
+            last[key] = replica
+    return out
+
+
+def _end_to_end_stats(n_sessions: int, iters: int) -> dict:
+    """Request->replica ingest throughput: session ids in, replica ids out.
+
+    Three tiers over the same fleet:
+
+    * ``host_loop``    — the PR 3 path: scalar per-session hashing + dict
+      bookkeeping around the fused routing dispatch (string ids);
+    * ``vectorized``   — ``route_batch``: padded byte-matrix FNV-1a hashing,
+      fused dispatch, bulk open-addressing movement store (string ids);
+    * ``fused_ingest_ids`` — ``route_ids``: raw u64 int ids hashed INSIDE
+      the routing kernel (no observability — the raw device ingest rate).
+
+    Timed best-of-``iters`` with the tiers interleaved round-robin so slow
+    hypervisor-drift windows hit every tier alike and the speedup ratios
+    noise-cancel (same discipline as the severity sweep).
+    """
+    ids = [f"session-{i:012d}" for i in range(n_sessions)]
+    raw = np.random.default_rng(1).integers(
+        0, 2**64, size=(n_sessions,), dtype=np.uint64
+    )
+    routers = [BatchRouter(N_REPLICAS) for _ in range(3)]
+    host_last: dict = {}
+    tiers = [
+        ("vectorized", lambda: routers[0].route_batch(ids)),
+        ("host_loop", lambda: _host_loop_route_batch(routers[1], ids, host_last)),
+        ("fused_ingest_ids", lambda: jax.block_until_ready(routers[2].route_ids(raw))),
+    ]
+    best = {name: float("inf") for name, _ in tiers}
+    for name, fn in tiers:  # compile + warm each datapath once
+        fn()
+    for _ in range(iters):
+        for name, fn in tiers:
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    out = {
+        "batch_sessions": n_sessions,
+        **{
+            name: {
+                "us_per_batch": best[name] * 1e6,
+                "sessions_per_sec": n_sessions / best[name],
+            }
+            for name, _ in tiers
+        },
+    }
+    out["speedup"] = {
+        "vectorized_over_host_loop": best["host_loop"] / best["vectorized"],
+        "fused_ingest_over_host_loop": best["host_loop"] / best["fused_ingest_ids"],
+    }
+    return out
 
 
 _MULTI_DEVICE_SCRIPT = r"""
@@ -236,6 +318,7 @@ def main(argv: list[str] | None = None) -> None:
     batch = 1 << 17 if args.smoke else BATCH
     iters = 20 if args.smoke else 15
     scalar_keys = 200 if args.smoke else SCALAR_KEYS
+    e2e_sessions = 1 << 12 if args.smoke else E2E_SESSIONS
 
     rng = np.random.default_rng(0)
     keys_np = rng.integers(0, 2**64, size=(batch,), dtype=np.uint64)
@@ -255,13 +338,18 @@ def main(argv: list[str] | None = None) -> None:
     }
 
     # event storm: one fleet event per batch — the recompile-free path must
-    # absorb them; the scalar path re-resolves its table either way
-    t0 = time.perf_counter()
-    for ev, arg in EVENTS:
-        getattr(scalar, ev)(*(() if arg is None else (arg,)))
-        for k in skeys:
-            scalar.domain.locate(int(k))
-    s_ev_rate = len(EVENTS) * scalar_keys / (time.perf_counter() - t0)
+    # absorb them; the scalar path re-resolves its table either way.  The
+    # event list is net-zero (fail/recover and up/down pair off), so the
+    # best-of-N passes replay identical workloads.
+    s_ev_best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for ev, arg in EVENTS:
+            getattr(scalar, ev)(*(() if arg is None else (arg,)))
+            for k in skeys:
+                scalar.domain.locate(int(k))
+        s_ev_best = min(s_ev_best, time.perf_counter() - t0)
+    s_ev_rate = len(EVENTS) * scalar_keys / s_ev_best
     storm = {
         "scalar": {"keys_per_sec": s_ev_rate},
         # full iteration budget: the per-position minimum needs as many
@@ -275,6 +363,7 @@ def main(argv: list[str] | None = None) -> None:
         "two_pass": _severity_sweep(keys, iters, fused=False),
     }
     multi_device = _multi_device_stats(batch, max(3, iters // 3))
+    end_to_end = _end_to_end_stats(e2e_sessions, iters)
 
     payload = {
         "bench": "router",
@@ -286,6 +375,7 @@ def main(argv: list[str] | None = None) -> None:
         "event_storm": storm,
         "severity_sweep": severity,
         "multi_device": multi_device,
+        "end_to_end": end_to_end,
         "speedup": {
             "fused_over_two_pass_steady": steady["two_pass"]["us_per_batch"]
             / steady["fused"]["us_per_batch"],
@@ -334,6 +424,21 @@ def main(argv: list[str] | None = None) -> None:
         "router_fused_storm_over_steady",
         storm["fused"]["us_per_batch"],
         f"{payload['speedup']['fused_storm_over_steady']:.3f}x steady us/batch",
+    )
+    for tier in ("host_loop", "vectorized", "fused_ingest_ids"):
+        stats = end_to_end[tier]
+        rows.append(["end_to_end", tier, f"{stats['sessions_per_sec']:.0f}",
+                     f"{stats['us_per_batch']:.1f}"])
+        emit(
+            f"router_e2e_{tier}",
+            stats["us_per_batch"],
+            f"{stats['sessions_per_sec']:.0f} sessions/s",
+        )
+    emit(
+        "router_e2e_vectorized_speedup",
+        end_to_end["vectorized"]["us_per_batch"],
+        f"{end_to_end['speedup']['vectorized_over_host_loop']:.1f}x vs host loop, "
+        f"{end_to_end['speedup']['fused_ingest_over_host_loop']:.1f}x fused-ids",
     )
     if "error" not in multi_device:
         emit(

@@ -19,6 +19,13 @@ the fused datapath:
   The event-storm ratio carries a fixed per-event cost that only amortises
   at full batch size, and absolute throughput across different CI machines
   is meaningless — so a batch-size mismatch skips these with a note.
+* **ingest speedup** (when both records carry the ``end_to_end`` section):
+  the ``vectorized_over_host_loop`` sessions/s ratio — both tiers run the
+  same batch on the same machine, so the ratio is machine-portable.  At
+  matching session-batch sizes it must stay within the tolerance of the
+  baseline's; at smoke sizes (where fixed dispatch overhead compresses the
+  ratio) it must clear an absolute sanity floor instead — the vectorised
+  ingest beating the host loop at all is the property being guarded.
 
 Usage (the CI bench smoke step):
 
@@ -90,7 +97,49 @@ def check(current: dict, baseline: dict, tolerance: float) -> list[str]:
             "absolute keys/s checks skipped, the severity ratio above is "
             "the gate"
         )
+
+    failures += _check_end_to_end(current, baseline, tolerance)
     return failures
+
+
+#: smoke-size sanity floor for the vectorised-ingest speedup: at tiny
+#: session batches fixed dispatch overhead compresses the ratio, so the
+#: gate only insists the vectorised path still clearly beats the host loop
+E2E_SMOKE_FLOOR = 2.0
+
+
+def _check_end_to_end(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    if "end_to_end" not in baseline:
+        print("baseline has no end_to_end section (pre-ingest record): skipped")
+        return []
+    if "end_to_end" not in current:
+        return ["current run is missing the end_to_end ingest section"]
+    cur, base = current["end_to_end"], baseline["end_to_end"]
+    cur_spd = float(cur["speedup"]["vectorized_over_host_loop"])
+    base_spd = float(base["speedup"]["vectorized_over_host_loop"])
+    if cur.get("batch_sessions") == base.get("batch_sessions"):
+        floor = base_spd * (1 - tolerance)
+        print(
+            f"ingest vectorized/host-loop speedup: current {cur_spd:.2f}x vs "
+            f"baseline {base_spd:.2f}x (floor {floor:.2f}x)"
+        )
+        if cur_spd < floor:
+            return [
+                f"vectorized ingest speedup regressed: {cur_spd:.2f}x < "
+                f"{base_spd:.2f}x * (1 - {tolerance:.0%})"
+            ]
+    else:
+        print(
+            f"ingest session-batch sizes differ (current "
+            f"{cur.get('batch_sessions')} vs baseline {base.get('batch_sessions')}): "
+            f"speedup {cur_spd:.2f}x gated on the {E2E_SMOKE_FLOOR:.1f}x sanity floor"
+        )
+        if cur_spd < E2E_SMOKE_FLOOR:
+            return [
+                f"vectorized ingest no longer beats the host loop: "
+                f"{cur_spd:.2f}x < {E2E_SMOKE_FLOOR:.1f}x sanity floor"
+            ]
+    return []
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -103,6 +103,45 @@ def mulhi32(a: jax.Array, b: jax.Array) -> jax.Array:
     return ah * bh + (lh >> 16) + (hl >> 16) + (mid >> 16)
 
 
+# ---------------------------------------------------------------------------
+# u64 session-key mixing in u32 limb arithmetic — the device half of the
+# batched ingest path (DESIGN.md §9).  The TPU VPU has no 64-bit integer
+# datapath, so raw u64 session ids ride in as (lo, hi) u32 pairs and
+# splitmix64 is evaluated limb-wise; the router only ever consumes the LOW
+# 32 bits of the mixed key (``_coerce_keys`` truncates u64 -> u32), so the
+# final xor-shift needs just the low word.
+# ---------------------------------------------------------------------------
+
+
+def _xorshr64(lo: jax.Array, hi: jax.Array, s: int) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) ^= (lo, hi) >> s for 0 < s < 32, in u32 limbs."""
+    return lo ^ ((lo >> s) | (hi << (32 - s))), hi ^ (hi >> s)
+
+
+def _mul64(lo: jax.Array, hi: jax.Array, c: int) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) *= c mod 2**64 for a 64-bit constant c, in u32 limbs."""
+    cl, ch = np.uint32(c & 0xFFFFFFFF), np.uint32(c >> 32)
+    new_hi = mulhi32(lo, cl) + lo * ch + hi * cl
+    return lo * cl, new_hi
+
+
+def mix64_lo32(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Low 32 bits of ``splitmix64(hi << 32 | lo)`` in pure u32 ops.
+
+    Bit-exact with ``uint32(repro.core.bits.mix64(id))`` per lane — the
+    device-word truncation of the scalar int-session-key oracle
+    (``SessionRouter.session_key``).  ~30 VPU ops per lane; usable both in a
+    jit trace and inside a Pallas kernel body, which is what lets the fused
+    ingest kernel hash raw u64 ids and route them in the SAME dispatch.
+    """
+    lo, hi = lo.astype(jnp.uint32), hi.astype(jnp.uint32)
+    lo, hi = _xorshr64(lo, hi, 30)
+    lo, hi = _mul64(lo, hi, 0xBF58476D1CE4E5B9)
+    lo, hi = _xorshr64(lo, hi, 27)
+    lo, hi = _mul64(lo, hi, 0x94D049BB133111EB)
+    return lo ^ ((lo >> 31) | (hi << 1))
+
+
 def highest_one_bit_index(b: jax.Array) -> jax.Array:
     """floor(log2 b) for b >= 1, exact for all u32 (shift-or + popcount)."""
     b = b.astype(jnp.uint32)

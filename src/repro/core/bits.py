@@ -23,6 +23,12 @@ MASK32 = (1 << 32) - 1
 GOLDEN64 = 0x9E3779B97F4A7C15
 GOLDEN32 = 0x9E3779B9
 
+#: FNV-1a 64-bit parameters — the session-id string hash of
+#: ``repro.serving.router.SessionRouter.session_key`` (scalar) and
+#: ``np_fnv1a64`` (vectorised) share these.
+FNV64_OFFSET = 0xCBF29CE484222325
+FNV64_PRIME = 0x100000001B3
+
 # ---------------------------------------------------------------------------
 # u64 host-side family (pure python ints)
 # ---------------------------------------------------------------------------
@@ -110,6 +116,54 @@ def np_hash_iter32(key: np.ndarray, i: int) -> np.ndarray:
 def np_hash_pair32(h: np.ndarray, f: np.ndarray | int) -> np.ndarray:
     fm = np_mix32(np.asarray(f, dtype=np.uint32) + np.uint32(GOLDEN32))
     return np_mix32(h.astype(np.uint32) ^ fm)
+
+
+# ---------------------------------------------------------------------------
+# u64 vectorised numpy flavour — the host half of the batched ingest path
+# (DESIGN.md §9).  numpy uint64 arithmetic wraps mod 2**64 exactly like the
+# masked pure-python family above; tests pin the two equal element-for-element.
+# ---------------------------------------------------------------------------
+
+
+def np_mix64(z: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finalizer — bit-exact with ``mix64`` per lane."""
+    z = np.asarray(z, dtype=np.uint64)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def np_fnv1a64(byte_mat: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Vectorised FNV-1a over a padded ``(N, L)`` uint8 byte matrix.
+
+    Row i hashes its first ``lengths[i]`` bytes; the padding columns beyond a
+    row's length leave its accumulator untouched, so ragged batches hash
+    bit-exactly like the scalar per-byte loop (``SessionRouter.session_key``).
+    One fused numpy pass per byte *column* — O(L) passes over N rows instead
+    of O(N·L) interpreted byte steps.  The matrix is walked transposed
+    (contiguous column reads) and the ``live`` blend is skipped for the
+    columns every row still owns — for near-uniform id lengths (the common
+    shape) the whole hash is pure xor/multiply passes.
+    """
+    byte_mat = np.asarray(byte_mat, dtype=np.uint8)
+    lengths = np.asarray(lengths)
+    cols = np.ascontiguousarray(byte_mat.T)
+    n, L = byte_mat.shape
+    min_len = int(lengths.min()) if n else 0
+    h = np.full(n, np.uint64(FNV64_OFFSET), dtype=np.uint64)
+    prime = np.uint64(FNV64_PRIME)
+    for j in range(L):
+        nh = (h ^ cols[j]) * prime
+        h = nh if j < min_len else np.where(j < lengths, nh, h)
+    return h
+
+
+def np_split64(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """u64 array -> (low, high) u32 halves — the device-ingest operand split
+    (the TPU datapath is u32-only; the fused ingest kernel re-assembles the
+    pair in 32-bit limb arithmetic)."""
+    x = np.asarray(x, dtype=np.uint64)
+    return x.astype(np.uint32), (x >> np.uint64(32)).astype(np.uint32)
 
 
 def np_highest_one_bit_index(b: np.ndarray) -> np.ndarray:

@@ -38,6 +38,7 @@ from repro.core.binomial_jax import (
     _unrolled_body,
     hash_iter,
     hash_pair,
+    mix64_lo32,
     mulhi32,
     next_pow2_u32,
 )
@@ -248,6 +249,33 @@ def binomial_memento_route(
     against the scalar ``SessionRouter(binomial32, chain_bits=32,
     resolve="table")`` oracle (tests enforce).
     """
+    return _route_table_impl(keys, packed_mask, table, state, omega, n_words)
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "n_words"))
+def binomial_ingest_route(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    omega: int = 16,
+    *,
+    n_words: int,
+) -> jax.Array:
+    """Fused u64-id ingest + lookup + divert — ONE dispatch, no key array.
+
+    The pure-jnp mirror of the fused ingest Pallas kernel
+    (``repro.kernels.binomial_hash.binomial_ingest_fused_2d``): raw u64
+    session ids arrive as (lo, hi) u32 halves, ``mix64_lo32`` derives the
+    u32 routing key in-trace, and the key feeds the same ω-unrolled
+    lookup + table divert as ``binomial_memento_route`` — all inside one
+    jit, so XLA fuses the ~30-op splitmix64 limb mix into the lookup's
+    elementwise pass and no intermediate ``keys[N]`` array is ever
+    materialised in memory (DESIGN.md §9).  Bit-exact with hashing on the
+    host (``bits.np_mix64`` then truncate) and routing the keys.
+    """
+    keys = mix64_lo32(ids_lo, ids_hi)
     return _route_table_impl(keys, packed_mask, table, state, omega, n_words)
 
 

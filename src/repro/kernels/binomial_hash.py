@@ -39,6 +39,14 @@ Plus the serving hot path built on the dynamic flavour:
   through this kernel with device-resident fleet state — zero recompiles and
   zero per-batch host->device state uploads across arbitrary scale/fail
   event streams.
+
+* **fused ingest** (``binomial_ingest_fused_2d`` /
+  ``binomial_ingest_pallas_fused``) — the fused kernel with the session-key
+  hash pulled inside too: raw u64 session ids ride in as (lo, hi) u32
+  halves, the limb-wise splitmix64 (``binomial_jax.mix64_lo32``) derives
+  the u32 routing key in-register, and the identical lookup+divert body
+  finishes the job — id -> replica in ONE dispatch with no ``keys[N]``
+  array anywhere (DESIGN.md §9; ``BatchRouter.route_ids``).
 """
 from __future__ import annotations
 
@@ -55,6 +63,7 @@ from repro.core.binomial_jax import (
     _unrolled_body,
     hash_pair,
     mix32,
+    mix64_lo32,
     mulhi32,
     next_pow2_u32,
 )
@@ -213,15 +222,19 @@ def binomial_bulk_lookup_pallas_dyn(
 # ---------------------------------------------------------------------------
 
 
-def _kernel_fused(
-    state_ref, mask_ref, table_ref, keys_ref, out_ref, *, omega: int,
-    n_words: int, n_slots: int,
+def _fused_route_body(
+    keys, state_ref, mask_ref, table_ref, *, omega: int, n_words: int,
+    n_slots: int,
 ):
+    """Shared fused lookup+divert body: u32 keys -> u32 replica ids.
+
+    Factored out so the plain fused kernel (pre-hashed keys) and the ingest
+    kernel (u64 ids mixed in-kernel) run the exact same routing math.
+    """
     n = state_ref[0].astype(jnp.uint32)
     n_alive = state_ref[1].astype(jnp.uint32)
     E = next_pow2_u32(n)
     M = E >> 1
-    keys = keys_ref[...].astype(jnp.uint32)
     b = _unrolled_body(keys, E, M, n, omega)
     b = jnp.where(n <= np.uint32(1), np.uint32(0), b)
 
@@ -260,7 +273,33 @@ def _kernel_fused(
         q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
         return jnp.where(hit, gather(q), bb)
 
-    b = jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)
+    return jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)
+
+
+def _kernel_fused(
+    state_ref, mask_ref, table_ref, keys_ref, out_ref, *, omega: int,
+    n_words: int, n_slots: int,
+):
+    keys = keys_ref[...].astype(jnp.uint32)
+    b = _fused_route_body(
+        keys, state_ref, mask_ref, table_ref, omega=omega, n_words=n_words,
+        n_slots=n_slots,
+    )
+    out_ref[...] = b.astype(jnp.int32)
+
+
+def _kernel_ingest(
+    state_ref, mask_ref, table_ref, lo_ref, hi_ref, out_ref, *, omega: int,
+    n_words: int, n_slots: int,
+):
+    # u64 ids -> u32 routing keys via the limb-wise splitmix64 (the VPU has
+    # no 64-bit datapath), then the identical fused lookup+divert body: the
+    # whole request->replica map in ONE kernel, no key array in HBM.
+    keys = mix64_lo32(lo_ref[...], hi_ref[...])
+    b = _fused_route_body(
+        keys, state_ref, mask_ref, table_ref, omega=omega, n_words=n_words,
+        n_slots=n_slots,
+    )
     out_ref[...] = b.astype(jnp.int32)
 
 
@@ -360,3 +399,115 @@ def binomial_route_pallas_fused(
         interpret=interpret,
     )
     return out.reshape(-1)[:total].reshape(keys.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused ingest flavour: raw u64 session ids -> replica ids in ONE kernel.
+# The ids arrive as (lo, hi) u32 halves (the VPU has no 64-bit datapath);
+# the limb-wise splitmix64 (`mix64_lo32`, ~30 VPU ops) derives the u32
+# routing key in-register and feeds the SAME fused lookup+divert body — no
+# intermediate keys[N] array ever exists, on-chip or in HBM (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
+)
+def binomial_ingest_fused_2d(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    n_words: int,
+    n_slots: int,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(rows, 128) u32 id halves + fleet state -> (rows, 128) i32 replica ids.
+
+    The ingest twin of ``binomial_route_fused_2d``: two key blocks in (the
+    u64 id split into u32 limbs), one replica block out, hash + lookup +
+    divert under one ``pallas_call``.  Same operand contract otherwise.
+    """
+    rows, lanes = ids_lo.shape
+    if ids_hi.shape != ids_lo.shape:
+        raise ValueError(
+            f"id halves must agree in shape, got {ids_lo.shape} vs {ids_hi.shape}"
+        )
+    if lanes != LANES:
+        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
+    if rows % block_rows != 0:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
+    if not 1 <= n_words <= packed_mask.shape[1]:
+        raise ValueError(
+            f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]"
+        )
+    if not 1 <= n_slots <= table.shape[1]:
+        raise ValueError(
+            f"n_slots ({n_slots}) must be in [1, {table.shape[1]}]"
+        )
+    grid = (rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
+            pl.BlockSpec(table.shape, lambda i, s: (0, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_ingest, omega=omega, n_words=n_words, n_slots=n_slots
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(
+        jnp.asarray(state, jnp.uint32).reshape(2),
+        packed_mask.astype(jnp.uint32),
+        table.astype(jnp.int32),
+        ids_lo.astype(jnp.uint32),
+        ids_hi.astype(jnp.uint32),
+    )
+
+
+def binomial_ingest_pallas_fused(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    n_words: int,
+    n_slots: int,
+    omega: int = 16,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Any-shape u32 id halves + fleet state -> i32 replica ids, fused ingest."""
+    lo = ids_lo.reshape(-1).astype(jnp.uint32)
+    hi = ids_hi.reshape(-1).astype(jnp.uint32)
+    total = lo.shape[0]
+    tile = block_rows * LANES
+    padded = (total + tile - 1) // tile * tile
+    if padded != total:
+        lo = jnp.pad(lo, (0, padded - total))
+        hi = jnp.pad(hi, (0, padded - total))
+    out = binomial_ingest_fused_2d(
+        lo.reshape(-1, LANES),
+        hi.reshape(-1, LANES),
+        packed_mask,
+        table,
+        state,
+        n_words,
+        n_slots,
+        omega=omega,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    return out.reshape(-1)[:total].reshape(ids_lo.shape)

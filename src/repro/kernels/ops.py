@@ -10,10 +10,11 @@ from __future__ import annotations
 import jax
 
 from repro.core.binomial_jax import binomial_lookup_dyn
-from repro.core.memento_jax import binomial_memento_route
+from repro.core.memento_jax import binomial_ingest_route, binomial_memento_route
 from repro.kernels.binomial_hash import (
     binomial_bulk_lookup_pallas,
     binomial_bulk_lookup_pallas_dyn,
+    binomial_ingest_pallas_fused,
     binomial_route_pallas_fused,
 )
 from repro.kernels.ref import binomial_bulk_lookup_ref
@@ -110,6 +111,54 @@ def binomial_route_bulk(
         )
     return binomial_memento_route(
         keys, packed_mask, table, state, omega=omega, n_words=n_words
+    )
+
+
+def binomial_route_ingest_bulk(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    *,
+    n_words: int,
+    n_slots: int,
+    omega: int = 16,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_rows: int = 512,
+) -> jax.Array:
+    """Fused ingest routing: raw u64 session ids (as u32 halves) + fleet
+    state -> int32 replica ids, ONE dispatch.
+
+    The end-to-end request hot path (DESIGN.md §9): the limb-wise splitmix64
+    session-key mix, the BinomialHash lookup AND the replacement-table divert
+    all run under one compiled executable (fused ingest Pallas kernel on TPU /
+    interpret mode, fused jnp jit elsewhere) — the ``keys[N]`` array that the
+    pre-hash path materialises on the host never exists anywhere.  Bit-exact
+    with hashing ids via ``bits.np_mix64`` (truncated u32) and routing
+    through ``binomial_route_bulk``.
+
+    ids_lo / ids_hi  low/high u32 halves of the u64 ids (``bits.np_split64``)
+    — remaining operands exactly as ``binomial_route_bulk``.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return binomial_ingest_pallas_fused(
+            ids_lo,
+            ids_hi,
+            packed_mask,
+            table,
+            state,
+            n_words,
+            n_slots,
+            omega=omega,
+            block_rows=block_rows,
+            interpret=interpret,
+        )
+    return binomial_ingest_route(
+        ids_lo, ids_hi, packed_mask, table, state, omega=omega, n_words=n_words
     )
 
 

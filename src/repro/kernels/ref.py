@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.binomial_jax import _unrolled_body
+from repro.core.binomial_jax import _unrolled_body, mix64_lo32
 from repro.core.memento_jax import _route_table_impl
 
 
@@ -50,4 +50,22 @@ def binomial_route_ref(
         jnp.asarray(state, jnp.uint32),
         omega,
         int(packed_mask.shape[1]) if n_words is None else n_words,
+    )
+
+
+def binomial_ingest_route_ref(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    omega: int = 16,
+    n_words: int | None = None,
+) -> jax.Array:
+    """Fused u64-id ingest + lookup + divert oracle (same math as the ingest
+    kernel): the id halves are mixed with the limb-wise splitmix64 and the
+    resulting u32 key routed exactly like ``binomial_route_ref``."""
+    keys = mix64_lo32(jnp.asarray(ids_lo), jnp.asarray(ids_hi))
+    return binomial_route_ref(
+        keys, packed_mask, table, state, omega=omega, n_words=n_words
     )

@@ -68,22 +68,25 @@ def route(p, x, token_ids, layer_salt, cfg: ArchConfig):
     if m.router == "hash":
         # The paper's consistent-hash router: key = mix(token_id, salt, k).
         # layer_salt may be a traced scan counter — mix with jnp ops.
+        # All K salted key families are built as one broadcast (B,S,K)
+        # tensor and routed by ONE lookup dispatch — the lookup is
+        # elementwise over its key operand, so this is bit-exact with the
+        # former per-k loop while collapsing K compiled-call dispatches
+        # (and K ω-unrolled producers for XLA to fuse) into one.
         keys = token_ids.astype(jnp.uint32)
         salt0 = jnp.asarray(layer_salt, jnp.uint32) * np.uint32(1000003)
-        ids = []
-        for k in range(K):
-            salt = (salt0 + np.uint32(k * 7919 + 1)) * GOLDEN32
-            kk = mix32(keys ^ salt)
-            if m.router_dynamic_n:
-                # expert count as a traced operand of the router lookup: when
-                # route() runs eagerly (routing sweeps, placement studies) one
-                # compiled trace serves every E. Inside a jitted model step E
-                # is a static config constant, so this cannot prevent the
-                # enclosing step from retracing on resize.
-                ids.append(binomial_lookup_dyn(kk, jnp.uint32(E), omega=m.router_hash_omega))
-            else:
-                ids.append(binomial_lookup_vec(kk, E, omega=m.router_hash_omega))
-        expert_ids = jnp.stack(ids, axis=-1)
+        k_salts = (np.arange(K) * 7919 + 1).astype(np.uint32)  # (K,)
+        salts = (salt0 + k_salts) * GOLDEN32
+        kk = mix32(keys[..., None] ^ salts)  # (B, S, K)
+        if m.router_dynamic_n:
+            # expert count as a traced operand of the router lookup: when
+            # route() runs eagerly (routing sweeps, placement studies) one
+            # compiled trace serves every E. Inside a jitted model step E
+            # is a static config constant, so this cannot prevent the
+            # enclosing step from retracing on resize.
+            expert_ids = binomial_lookup_dyn(kk, jnp.uint32(E), omega=m.router_hash_omega)
+        else:
+            expert_ids = binomial_lookup_vec(kk, E, omega=m.router_hash_omega)
         gates = jnp.full(expert_ids.shape, 1.0 / K, jnp.float32)
         return expert_ids, gates, jnp.float32(0.0)
 

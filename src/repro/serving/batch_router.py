@@ -45,6 +45,7 @@ scalar router is the oracle for the batched one.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bits
@@ -59,9 +60,10 @@ from repro.kernels.binomial_hash import LANES
 from repro.kernels.ops import (
     binomial_bulk_lookup_dyn,
     binomial_route_bulk,
+    binomial_route_ingest_bulk,
     make_sharded_route,
 )
-from repro.serving.router import SessionRouter
+from repro.serving.router import SessionRouter, hash_session_ids
 
 
 class BatchRouter:
@@ -356,30 +358,80 @@ class BatchRouter:
         for session-level observability, ``route_keys_np`` for numpy.
         """
         keys_u32 = self._coerce_keys(keys)
-        rows = -(-int(np.size(keys_u32)) // LANES)
+        size = int(np.size(keys_u32))
+        if size == 0:
+            # zero-row batches have nothing to dispatch (and the kernel grid
+            # cannot be empty) — answer with an empty result of the right type
+            return jnp.zeros(np.shape(keys_u32), dtype=jnp.int32)
+        rows = -(-size // LANES)
         # tune for what one device actually sees: the per-shard row count
         block_rows = self._resolve_block_rows(-(-rows // self._n_shards))
         if self.mesh is not None:
             out = self._route_sharded(keys_u32, block_rows)
         else:
             out = self._dispatch(keys_u32, block_rows)
-        self.stats.lookups += int(np.size(keys_u32))
+        self.stats.lookups += size
         return out
 
     def route_keys_np(self, keys) -> np.ndarray:
         """Numpy-in/numpy-out convenience wrapper around ``route_keys``."""
         return np.asarray(self.route_keys(keys))
 
+    def route_ids(self, session_ids) -> jax.Array:
+        """Raw u64 int session ids -> int32 replica ids, ONE fused dispatch.
+
+        The device ingest path (DESIGN.md §9): ids are split into u32 halves
+        on the host (two cheap vectorised views) and the splitmix64 session
+        hash, the BinomialHash lookup and the table divert all run inside
+        the SAME kernel — the ``keys[N]`` array the pre-hash path builds
+        never exists.  Bit-exact with ``route_keys(hash_session_ids(ids))``.
+        Single-host only (mesh users pre-hash and call ``route_keys``);
+        skips movement bookkeeping like ``route_keys``.
+        """
+        if self.mesh is not None:
+            raise ValueError(
+                "route_ids is single-host only; under a mesh pre-hash with "
+                "hash_session_ids and call route_keys"
+            )
+        ids = np.ascontiguousarray(session_ids, dtype=np.uint64)
+        if ids.size == 0:
+            return jnp.zeros(ids.shape, dtype=jnp.int32)
+        lo, hi = bits.np_split64(ids)
+        rows = -(-int(ids.size) // LANES)
+        block_rows = self._resolve_block_rows(rows)
+        out = binomial_route_ingest_bulk(
+            lo,
+            hi,
+            self._packed_dev,
+            self._table_dev,
+            self._state_dev,
+            n_words=self.n_words,
+            n_slots=self.capacity,
+            omega=self.omega,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+            block_rows=block_rows,
+        )
+        self.stats.lookups += int(ids.size)
+        return out
+
     def route_batch(self, session_ids) -> np.ndarray:
         """Session ids (str/int) -> int32 replica ids, one device round-trip.
 
-        Session-id hashing and movement bookkeeping are O(N) host Python —
-        fine at request-batch sizes.  For the raw throughput path (millions
-        of pre-hashed keys) call ``route_keys`` directly; that is what
-        ``benchmarks/bench_router.py`` measures.
+        The whole request path is batched (DESIGN.md §9): ids are hashed by
+        the vectorised ``hash_session_ids`` (padded byte-matrix FNV-1a for
+        strings, ``np_mix64`` for ints — bit-exact with the scalar
+        ``session_key``), routed in one fused device dispatch, and movement
+        bookkeeping lands in the bulk open-addressing ``SessionStore`` — no
+        per-session Python anywhere, so ingest keeps up with the device
+        rate instead of capping it.  For pre-hashed keys call ``route_keys``
+        directly; for raw u64 int ids ``route_ids`` additionally fuses the
+        hash into the routing kernel itself.
         """
-        keys = [self.session_key(s) for s in session_ids]
-        out = self.route_keys_np(np.array(keys, dtype=np.uint64))
+        keys = hash_session_ids(session_ids)
+        if keys.size == 0:
+            return np.empty(keys.shape, dtype=np.int32)
+        out = self.route_keys_np(keys)
         self.scalar.note_routes(keys, out)
         return out
 

@@ -70,7 +70,14 @@ class ServingTier:
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
 
     def serve(self, requests: list[Request]) -> dict[str, np.ndarray]:
-        """Route the whole batch in one device pass, group, serve aligned."""
+        """Route the whole batch in one device pass, group, serve aligned.
+
+        Ingest is batched end to end (DESIGN.md §9): session ids are hashed
+        vectorised, routed in one fused dispatch, and movement-tracked in
+        bulk — no per-request Python on the routing path.
+        """
+        if not requests:
+            return {}  # zero-row batches have nothing to route or serve
         replicas = self.router.route_batch([r.session_id for r in requests])
         groups: dict[int, list[Request]] = {}
         for r, rep_id in zip(requests, replicas):

@@ -1,0 +1,351 @@
+"""Batched key-ingest bit-exactness: the vectorised session-id hashing
+(padded byte-matrix FNV-1a / np_mix64), the u32-limb device splitmix64, the
+fused hash+route ingest kernel, the bulk open-addressing observability
+store, and the zero-row edge — all pinned to the scalar oracles
+(``SessionRouter.session_key``, ``bits.mix64``, the per-key dict-loop
+semantics) by hypothesis property streams with seeded fallbacks."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bits
+from repro.core.binomial_jax import mix64_lo32
+from repro.core.memento_jax import mask_words, pack_removed_mask, pack_table
+from repro.kernels import ops
+from repro.kernels.ref import binomial_ingest_route_ref
+from repro.serving.batch_router import BatchRouter
+from repro.serving.router import SessionRouter, encode_session_ids, hash_session_ids
+from repro.serving.session_store import SessionStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a test dependency
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(23)
+
+
+def _scalar_keys(ids) -> np.ndarray:
+    # the scalar oracle takes python str/int (numpy scalars would overflow
+    # its pure-python 64-bit masking)
+    return np.array(
+        [SessionRouter.session_key(s if isinstance(s, str) else int(s)) for s in ids],
+        dtype=np.uint64,
+    )
+
+
+# ---------------------------------------------------------------------------
+# vectorised hashing vs the scalar session_key oracle
+# ---------------------------------------------------------------------------
+
+
+def test_hash_session_ids_string_boundaries():
+    """Length/padding edges: empty string, 1 byte, multi-byte unicode, long
+    ragged rows — the padded-matrix FNV must ignore padding bytes exactly."""
+    ids = ["", "a", "ab", "ü", "€", "漢字" * 7, "x" * 257, "user-0", "user-0\x00"]
+    np.testing.assert_array_equal(hash_session_ids(ids), _scalar_keys(ids))
+
+
+def test_hash_session_ids_int_and_array_paths():
+    ids = [0, 1, 2**31, 2**63 + 17, 2**64 - 1]
+    np.testing.assert_array_equal(hash_session_ids(ids), _scalar_keys(ids))
+    arr = RNG.integers(0, 2**64, size=1024, dtype=np.uint64)
+    np.testing.assert_array_equal(hash_session_ids(arr), _scalar_keys(arr))
+    narrow = RNG.integers(0, 2**31, size=64, dtype=np.int32)
+    np.testing.assert_array_equal(hash_session_ids(narrow), _scalar_keys(narrow))
+
+
+def test_hash_session_ids_mixed_batch_reinterleaves():
+    ids = ["s-0", 42, "s-1", 2**40, "", 7, "漢"]
+    np.testing.assert_array_equal(hash_session_ids(ids), _scalar_keys(ids))
+
+
+def test_hash_session_ids_accepts_any_iterable():
+    """Generators and sets worked through the old per-item loop; the batch
+    path must keep accepting them (regression guard)."""
+    ids = [f"g-{i}" for i in range(40)]
+    np.testing.assert_array_equal(
+        hash_session_ids(s for s in ids), _scalar_keys(ids)
+    )
+    got = sorted(hash_session_ids(set(ids)).tolist())
+    assert got == sorted(_scalar_keys(ids).tolist())
+    router = BatchRouter(4)
+    out = router.route_batch(s for s in ids)
+    np.testing.assert_array_equal(out, router.route_batch(ids))
+
+
+def test_hash_session_ids_empty_batch():
+    assert hash_session_ids([]).shape == (0,)
+    assert hash_session_ids([]).dtype == np.uint64
+    assert hash_session_ids(np.empty(0, np.uint64)).shape == (0,)
+
+
+def test_encode_session_ids_matrix_layout():
+    mat, lengths = encode_session_ids(["abc", "", "de"])
+    assert mat.shape == (3, 3)
+    assert list(lengths) == [3, 0, 2]
+    assert bytes(mat[0]) == b"abc"
+    assert bytes(mat[1]) == b"\x00\x00\x00"  # padding stays zero
+    assert bytes(mat[2]) == b"de\x00"
+
+
+def test_seeded_random_unicode_and_int_ids_match_scalar():
+    """Seeded fallback for the hypothesis property below: random unicode
+    strings (including astral-plane codepoints) and full-range ints."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        n = int(rng.integers(1, 80))
+        ids = []
+        for _ in range(n):
+            if rng.random() < 0.5:
+                cps = rng.integers(1, 0x10FFFF, size=rng.integers(0, 24))
+                ids.append(
+                    "".join(chr(c) for c in cps if not 0xD800 <= c <= 0xDFFF)
+                )
+            else:
+                ids.append(int(rng.integers(0, 2**64, dtype=np.uint64)))
+        np.testing.assert_array_equal(hash_session_ids(ids), _scalar_keys(ids))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.lists(
+            st.one_of(
+                st.text(max_size=48),
+                st.integers(min_value=0, max_value=2**64 - 1),
+            ),
+            max_size=64,
+        )
+    )
+    def test_hypothesis_hash_session_ids_matches_scalar(ids):
+        np.testing.assert_array_equal(hash_session_ids(ids), _scalar_keys(ids))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=2**64 - 1), max_size=48))
+    def test_hypothesis_mix64_limb_pair_matches_scalar(ids64):
+        ids = np.array(ids64, dtype=np.uint64).reshape(-1)
+        lo, hi = bits.np_split64(ids)
+        got = np.asarray(mix64_lo32(jnp.asarray(lo), jnp.asarray(hi)))
+        want = np.array(
+            [bits.mix64(int(i)) & 0xFFFFFFFF for i in ids], dtype=np.uint32
+        )
+        np.testing.assert_array_equal(got, want)
+
+
+def test_mix64_limb_pair_edges():
+    edges = np.array([0, 1, 2**32 - 1, 2**32, 2**63, 2**64 - 1], dtype=np.uint64)
+    lo, hi = bits.np_split64(edges)
+    got = np.asarray(mix64_lo32(jnp.asarray(lo), jnp.asarray(hi)))
+    want = np.array([bits.mix64(int(i)) & 0xFFFFFFFF for i in edges], np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_np_mix64_matches_scalar():
+    ids = RNG.integers(0, 2**64, size=2048, dtype=np.uint64)
+    want = np.array([bits.mix64(int(i)) for i in ids], dtype=np.uint64)
+    np.testing.assert_array_equal(bits.np_mix64(ids), want)
+
+
+# ---------------------------------------------------------------------------
+# fused ingest dispatch (hash + lookup + divert in one kernel)
+# ---------------------------------------------------------------------------
+
+
+def _oracle(n):
+    return SessionRouter(n, engine="binomial32", chain_bits=32, resolve="table")
+
+
+def test_fused_ingest_paths_agree_with_scalar_oracle():
+    """jnp jit == pallas(interpret) == unjitted ref == scalar locate(mix64)."""
+    oracle = _oracle(12)
+    for r in (1, 4, 9):
+        oracle.fail(r)
+    dom = oracle.domain
+    packed = pack_removed_mask(dom.removed, 64)
+    table = pack_table(dom.replacement_table, 64)
+    state = np.array([dom.total_count, dom.alive_count], np.uint32)
+    ids = RNG.integers(0, 2**64, size=2048, dtype=np.uint64)
+    lo, hi = bits.np_split64(ids)
+    expect = [dom.locate(bits.mix64(int(i))) for i in ids]
+    kw = dict(n_words=mask_words(64), n_slots=64)
+    jnp_out = ops.binomial_route_ingest_bulk(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(packed),
+        jnp.asarray(table), jnp.asarray(state), use_pallas=False, **kw,
+    )
+    pl_out = ops.binomial_route_ingest_bulk(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(packed),
+        jnp.asarray(table), jnp.asarray(state), interpret=True, block_rows=4,
+        **kw,
+    )
+    ref_out = binomial_ingest_route_ref(lo, hi, packed, table, state)
+    np.testing.assert_array_equal(np.asarray(jnp_out), expect)
+    np.testing.assert_array_equal(np.asarray(pl_out), expect)
+    np.testing.assert_array_equal(np.asarray(ref_out), expect)
+
+
+def test_route_ids_matches_prehash_route_keys_across_events():
+    """BatchRouter.route_ids (device-fused hash+route) == hashing on the
+    host then route_keys, through a fleet-event stream."""
+    router = BatchRouter(16, interpret=True, block_rows=8)
+    ids = RNG.integers(0, 2**64, size=4096, dtype=np.uint64)
+    for ev, arg in [("fail", 3), ("scale_up", None), ("fail", 9), ("recover", 3)]:
+        getattr(router, ev)(*(() if arg is None else (arg,)))
+        fused = np.asarray(router.route_ids(ids))
+        prehash = router.route_keys_np(hash_session_ids(ids))
+        np.testing.assert_array_equal(fused, prehash)
+
+
+def test_route_ids_rejects_mesh():
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    router = BatchRouter(8, mesh=mesh)
+    with pytest.raises(ValueError, match="single-host"):
+        router.route_ids(np.arange(8, dtype=np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# the bulk observability store vs the sequential dict-loop semantics
+# ---------------------------------------------------------------------------
+
+
+class _DictLoop:
+    """The pre-vectorisation note_routes body, verbatim (the semantics
+    oracle: first-come insertion under the cap, one count per move)."""
+
+    def __init__(self, cap):
+        self.last, self.cap, self.moved = {}, cap, 0
+
+    def record(self, keys, replicas):
+        before = self.moved
+        for key, replica in zip(keys, replicas):
+            key, replica = int(key), int(replica)
+            prev = self.last.get(key)
+            if prev is None:
+                if len(self.last) < self.cap:
+                    self.last[key] = replica
+                continue
+            if prev != replica:
+                self.moved += 1
+                self.last[key] = replica
+        return self.moved - before
+
+
+def _run_store_stream(rng, cap, batches=25):
+    store = SessionStore(max_entries=cap, initial_slots=4)
+    ref = _DictLoop(cap)
+    for epoch in range(batches):
+        n = int(rng.integers(1, 300))
+        # heavy duplication; replica deterministic per (key, epoch) like a
+        # routed batch (duplicates within a batch always carry equal values)
+        keys = rng.integers(0, 64, size=n).astype(np.uint64) * np.uint64(
+            0x9E3779B97F4A7C15
+        )
+        reps = ((keys.astype(np.int64) + epoch // 5) % 7).astype(np.int32)
+        assert store.record(keys, reps) == ref.record(keys, reps)
+        assert store.count == len(ref.last)
+    probe = rng.integers(0, 96, size=64).astype(np.uint64) * np.uint64(
+        0x9E3779B97F4A7C15
+    )
+    got = store.lookup(probe)
+    want = np.array([ref.last.get(int(k), -1) for k in probe], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_seeded_session_store_matches_dict_loop():
+    for seed, cap in ((0, 1 << 20), (1, 40), (2, 7), (3, 1)):
+        _run_store_stream(np.random.default_rng(seed), cap)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32), st.integers(1, 200))
+    def test_hypothesis_session_store_matches_dict_loop(seed, cap):
+        _run_store_stream(np.random.default_rng(seed), cap, batches=8)
+
+
+def test_session_store_record_one_matches_bulk_semantics():
+    """The scalar fast path (the per-request route() walk) tracks the dict
+    loop through interleaved scalar/bulk updates, cap and grow included."""
+    rng = np.random.default_rng(5)
+    store = SessionStore(max_entries=30, initial_slots=2)
+    ref = _DictLoop(30)
+    for epoch in range(400):
+        k = int(rng.integers(0, 48)) * 0x9E3779B97F4A7C15 % 2**64
+        v = int((k + epoch // 7) % 5)
+        assert store.record_one(k, v) == ref.record([k], [v])
+        if epoch % 25 == 0:  # interleave a bulk batch
+            keys = rng.integers(0, 48, size=20).astype(np.uint64) * np.uint64(
+                0x9E3779B97F4A7C15
+            )
+            vals = ((keys.astype(np.int64) + epoch // 7) % 5).astype(np.int32)
+            assert store.record(keys, vals) == ref.record(keys, vals)
+        assert store.count == len(ref.last)
+
+
+def test_session_store_cap_is_first_come():
+    store = SessionStore(max_entries=2, initial_slots=4)
+    assert store.record(np.array([10, 20, 30], np.uint64), np.array([1, 2, 3])) == 0
+    assert store.count == 2  # 30 fell past the cap, untracked
+    # tracked keys still count moves; the untracked one never does
+    assert store.record(np.array([10, 20, 30], np.uint64), np.array([5, 2, 9])) == 1
+    np.testing.assert_array_equal(
+        store.lookup(np.array([10, 20, 30], np.uint64)), [5, 2, -1]
+    )
+
+
+def test_session_store_grows_past_initial_slots():
+    store = SessionStore(max_entries=1 << 20, initial_slots=2)
+    keys = RNG.integers(0, 2**64, size=5000, dtype=np.uint64)
+    keys = np.unique(keys)
+    vals = (keys % np.uint64(11)).astype(np.int32)
+    assert store.record(keys, vals) == 0
+    assert store.count == keys.size
+    np.testing.assert_array_equal(store.lookup(keys), vals)
+    assert store._keys.size >= 2 * keys.size  # load factor held <= 1/2
+
+
+def test_router_moved_sessions_across_cap(monkeypatch):
+    """SessionRouter honours LAST_MAX through the vectorised store."""
+    monkeypatch.setattr(SessionRouter, "LAST_MAX", 5)
+    r = SessionRouter(8)
+    sessions = [f"cap-{i}" for i in range(12)]
+    for s in sessions:
+        r.route(s)
+    assert r.stats.moved_sessions == 0
+    assert len(r._last) == 5
+
+
+# ---------------------------------------------------------------------------
+# zero-row batches (the empty-batch regression: ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_batch_route_paths():
+    router = BatchRouter(8)
+    out = router.route_batch([])
+    assert isinstance(out, np.ndarray) and out.shape == (0,) and out.dtype == np.int32
+    dev = router.route_keys(np.empty(0, dtype=np.uint32))
+    assert dev.shape == (0,) and np.asarray(dev).size == 0
+    ids = router.route_ids(np.empty(0, dtype=np.uint64))
+    assert np.asarray(ids).size == 0
+    assert router.route_keys_np(np.empty((0,), np.uint64)).shape == (0,)
+    # stats untouched by empty dispatches
+    assert router.stats.lookups == 0
+    # and note_routes with nothing to note is a no-op
+    router.scalar.note_routes((), ())
+    assert router.stats.moved_sessions == 0
+
+
+def test_empty_batch_sharded_route():
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    router = BatchRouter(8, mesh=mesh)
+    assert np.asarray(router.route_keys(np.empty(0, np.uint32))).size == 0
+    assert router.route_batch([]).size == 0

@@ -9,8 +9,16 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.core import analysis
-from repro.core.binomial_jax import binomial_lookup_vec, mix32
-from repro.models.layers.moe import _capacity, _dispatch_local, apply_moe, init_moe, route
+from repro.core.binomial_jax import binomial_lookup_dyn, binomial_lookup_vec, mix32
+from repro.models.layers import moe as moe_mod
+from repro.models.layers.moe import (
+    GOLDEN32,
+    _capacity,
+    _dispatch_local,
+    apply_moe,
+    init_moe,
+    route,
+)
 
 
 def _cfg(router="topk", E=8, k=2, cf=8.0):
@@ -111,6 +119,70 @@ def test_hash_router_deterministic_across_layers():
     e3, _, _ = route({}, None, tokens, 4, cfg)
     assert (np.asarray(e1) == np.asarray(e2)).all()
     assert (np.asarray(e1) != np.asarray(e3)).any()  # layer salt decorrelates
+
+
+def _per_k_reference(tokens, layer_salt, E, K, dynamic, omega=16):
+    """The pre-fusion per-k loop, verbatim — the bit-exactness oracle for
+    the single-dispatch (B,S,K) hash router."""
+    keys = tokens.astype(jnp.uint32)
+    salt0 = jnp.asarray(layer_salt, jnp.uint32) * np.uint32(1000003)
+    ids = []
+    for k in range(K):
+        salt = (salt0 + np.uint32(k * 7919 + 1)) * GOLDEN32
+        kk = mix32(keys ^ salt)
+        if dynamic:
+            ids.append(binomial_lookup_dyn(kk, jnp.uint32(E), omega=omega))
+        else:
+            ids.append(binomial_lookup_vec(kk, E, omega=omega))
+    return jnp.stack(ids, axis=-1)
+
+
+@pytest.mark.parametrize("dynamic", [False, True], ids=["static_E", "dynamic_E"])
+@pytest.mark.parametrize("E,K", [(8, 1), (11, 3), (64, 8)])
+def test_hash_router_fused_k_matches_per_k_loop(dynamic, E, K):
+    """The broadcast-salted (B,S,K) single-dispatch router is bit-exact with
+    the former K-iteration loop, for static and dynamic expert counts."""
+    cfg = _cfg(router="hash", E=E, k=K)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router_dynamic_n=dynamic)
+    )
+    tokens = jnp.asarray(
+        np.random.default_rng(E * 31 + K).integers(0, 150000, (3, 127)), jnp.int32
+    )
+    for salt in (0, 5):
+        eids, gates, aux = route({}, None, tokens, salt, cfg)
+        ref = _per_k_reference(tokens, salt, E, K, dynamic)
+        np.testing.assert_array_equal(np.asarray(eids), np.asarray(ref))
+        assert eids.shape == (3, 127, K) and eids.dtype == jnp.int32
+        assert float(aux) == 0.0
+        np.testing.assert_allclose(np.asarray(gates), 1.0 / K)
+
+
+@pytest.mark.parametrize("dynamic", [False, True], ids=["static_E", "dynamic_E"])
+def test_hash_router_is_one_lookup_dispatch_for_all_k(dynamic, monkeypatch):
+    """All K expert choices come from ONE router lookup call (the fused
+    (B,S,K) dispatch), not K — and only the matching flavour is touched."""
+    calls = {"vec": 0, "dyn": 0}
+    real_vec, real_dyn = binomial_lookup_vec, binomial_lookup_dyn
+
+    def counting_vec(*a, **k):
+        calls["vec"] += 1
+        return real_vec(*a, **k)
+
+    def counting_dyn(*a, **k):
+        calls["dyn"] += 1
+        return real_dyn(*a, **k)
+
+    monkeypatch.setattr(moe_mod, "binomial_lookup_vec", counting_vec)
+    monkeypatch.setattr(moe_mod, "binomial_lookup_dyn", counting_dyn)
+    cfg = _cfg(router="hash", E=32, k=8)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router_dynamic_n=dynamic)
+    )
+    tokens = jnp.asarray(np.arange(256).reshape(2, 128), jnp.int32)
+    eids, _, _ = route({}, None, tokens, 2, cfg)
+    assert eids.shape == (2, 128, 8)
+    assert calls == ({"vec": 0, "dyn": 1} if dynamic else {"vec": 1, "dyn": 0})
 
 
 def test_apply_moe_full_layer_shapes():

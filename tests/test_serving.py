@@ -79,6 +79,15 @@ def test_serving_tier_end_to_end(tiny_model):
         assert (res[k] == res2[k]).all()
 
 
+def test_serving_tier_empty_batch(tiny_model):
+    """serve([]) must be a clean no-op, not a zero-row kernel dispatch."""
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=2, max_len=32)
+    assert tier.serve([]) == {}
+    assert tier.router.route_batch([]).shape == (0,)
+    assert tier.router.stats.lookups == 0
+
+
 def test_serving_tier_failover(tiny_model):
     cfg, params = tiny_model
     tier = ServingTier(cfg, params, n_replicas=3, max_len=32)
