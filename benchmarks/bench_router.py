@@ -13,18 +13,26 @@ exists for — and (c) a storm-severity sweep at fixed removed fractions:
 
 Plus a multi-device section — the mesh-sharded datapath (DESIGN.md §8) run
 in a subprocess with fake host devices, so the shard_map path is exercised
-end-to-end even on a single-chip host — and an ``end_to_end`` ingest
+end-to-end even on a single-chip host — an ``end_to_end`` ingest
 section: session ids in, replica ids out, comparing the vectorised ingest
 (``route_batch``: byte-matrix FNV-1a + bulk movement store, DESIGN.md §9)
 and the kernel-fused u64-id ingest (``route_ids``) against the retired
-per-session host-Python loop.
+per-session host-Python loop — and an ``engines`` section: the paper's
+engine comparison (Fig. 5) at device rate, every ``BULK_ENGINES`` entry
+routing the same batches through its own fused datapath (steady + 6%-storm
+fleets, interleaved round-robin so the cross-engine ratios noise-cancel).
 
 Outputs: ``name,us_per_call,derived`` lines for run.py, a CSV in
-benchmarks/out/ (gitignored), and the machine-readable ``BENCH_router.json``
-at the repo root — keys/sec and µs/batch per tier, tracked PR over PR
-(``benchmarks/check_router_regression.py`` gates CI on it).  ``--smoke``
+benchmarks/out/ (gitignored), and ONE canonical machine-readable record:
+full-size runs (run.py) write ``BENCH_router.json`` at the repo root,
+tracked PR over PR; ``--smoke`` runs (CI) write
+``benchmarks/out/BENCH_router_smoke.json`` (gitignored) — never the same
+name in two places (``benchmarks/check_router_regression.py`` gates CI by
+comparing the smoke record against the tracked baseline).  ``--smoke``
 shrinks sizes for the CI smoke step (exercises the full fused datapath
-incl. fleet events, in seconds).
+incl. fleet events, in seconds); ``--sections`` runs a subset (e.g.
+``--sections engines`` for the CI engines-comparison pass) and then skips
+the record/CSV outputs, which document full runs only.
 
 Batch timings are BEST-OF-N over the iteration loop — the workloads are
 deterministic, so the minimum is the classic noise-resistant estimator (as
@@ -158,6 +166,55 @@ def _severity_sweep(keys, iters: int, fused: bool) -> dict:
         }
         for i, frac in enumerate(SEVERITIES)
     }
+
+
+#: removed fraction of the slot space in the engines section's storm fleet
+ENGINE_STORM_FRACTION = 0.06
+
+
+def _engines_stats(keys, iters: int) -> dict:
+    """The paper's engine comparison (Fig. 5) at device rate: every
+    ``BULK_ENGINES`` entry routes the same key batches through its own
+    fused single-dispatch datapath — steady (healthy fleet) and storm
+    (``ENGINE_STORM_FRACTION`` of the slot space tombstoned) flavours.
+
+    All (engine, fleet) combos are timed interleaved round-robin with
+    best-of-``iters``, the same noise discipline as the severity sweep:
+    slow hypervisor-drift windows hit every combo alike, so the
+    cross-engine ratios the comparison is about noise-cancel.
+    """
+    from repro.core.registry import BULK_ENGINES
+
+    combos = []
+    for name in sorted(BULK_ENGINES):
+        steady = BatchRouter(N_REPLICAS, engine=name)
+        storm = BatchRouter(N_REPLICAS, engine=name)
+        n_removed = max(1, int(ENGINE_STORM_FRACTION * storm.domain.total_count))
+        for b in range(n_removed):
+            storm.fail(b)
+        combos.append((name, "steady", steady))
+        combos.append((name, "storm", storm))
+    for _, _, router in combos:  # compile + warm each datapath once
+        jax.block_until_ready(router.route_keys(keys))
+    best = {(name, kind): float("inf") for name, kind, _ in combos}
+    for _ in range(iters):
+        for name, kind, router in combos:
+            t0 = time.perf_counter()
+            jax.block_until_ready(router.route_keys(keys))
+            best[(name, kind)] = min(best[(name, kind)], time.perf_counter() - t0)
+    per_engine = {}
+    for name in sorted({n for n, _, _ in combos}):
+        per_engine[name] = {
+            kind: {
+                "us_per_batch": best[(name, kind)] * 1e6,
+                "keys_per_sec": np.size(keys) / best[(name, kind)],
+            }
+            for kind in ("steady", "storm")
+        }
+        per_engine[name]["storm_over_steady"] = (
+            best[(name, "storm")] / best[(name, "steady")]
+        )
+    return {"batch_keys": int(np.size(keys)), "per_engine": per_engine}
 
 
 def _host_loop_route_batch(router: BatchRouter, session_ids, last: dict):
@@ -303,6 +360,12 @@ def _multi_device_stats(batch: int, iters: int) -> dict:
     return res
 
 
+#: the bench's sections, in run order; ``--sections`` selects a subset
+ALL_SECTIONS = (
+    "steady", "event_storm", "severity", "multi_device", "end_to_end", "engines",
+)
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -310,8 +373,21 @@ def main(argv: list[str] | None = None) -> None:
         action="store_true",
         help="small sizes for CI: full datapath exercised, seconds not minutes",
     )
+    ap.add_argument(
+        "--sections",
+        default=",".join(ALL_SECTIONS),
+        help="comma-separated subset of sections to run (default: all); "
+        "subset runs skip the BENCH record / CSV, which document full runs",
+    )
     # run.py calls main() programmatically — don't inherit its sys.argv
     args = ap.parse_args([] if argv is None else argv)
+    run = {s for s in args.sections.split(",") if s}
+    unknown = run - set(ALL_SECTIONS)
+    if unknown:
+        raise SystemExit(
+            f"unknown sections {sorted(unknown)}; have {list(ALL_SECTIONS)}"
+        )
+    full = run == set(ALL_SECTIONS)
     # smoke batch stays large enough (128K keys) that the divert cost is
     # visible over fixed dispatch overhead — the severity ratio the CI
     # regression guard gates on needs that signal
@@ -327,77 +403,93 @@ def main(argv: list[str] | None = None) -> None:
     keys = jnp.asarray(keys_np.astype(np.uint32))
     skeys = keys_np[:scalar_keys]
 
-    scalar = _table_router(N_REPLICAS)
-    fused = BatchRouter(N_REPLICAS)
-    two_pass = BatchRouter(N_REPLICAS, fused=False)
+    steady = storm = severity = multi_device = end_to_end = engines = None
+    if run & {"steady", "event_storm"}:
+        scalar = _table_router(N_REPLICAS)
+        fused = BatchRouter(N_REPLICAS)
+        two_pass = BatchRouter(N_REPLICAS, fused=False)
 
-    steady = {
-        "scalar": {"keys_per_sec": _scalar_rate(scalar, skeys)},
-        "fused": _batch_stats(fused, keys, iters),
-        "two_pass": _batch_stats(two_pass, keys, iters),
-    }
+    if "steady" in run:
+        steady = {
+            "scalar": {"keys_per_sec": _scalar_rate(scalar, skeys)},
+            "fused": _batch_stats(fused, keys, iters),
+            "two_pass": _batch_stats(two_pass, keys, iters),
+        }
 
-    # event storm: one fleet event per batch — the recompile-free path must
-    # absorb them; the scalar path re-resolves its table either way.  The
-    # event list is net-zero (fail/recover and up/down pair off), so the
-    # best-of-N passes replay identical workloads.
-    s_ev_best = float("inf")
-    for _ in range(5):
-        t0 = time.perf_counter()
-        for ev, arg in EVENTS:
-            getattr(scalar, ev)(*(() if arg is None else (arg,)))
-            for k in skeys:
-                scalar.domain.locate(int(k))
-        s_ev_best = min(s_ev_best, time.perf_counter() - t0)
-    s_ev_rate = len(EVENTS) * scalar_keys / s_ev_best
-    storm = {
-        "scalar": {"keys_per_sec": s_ev_rate},
-        # full iteration budget: the per-position minimum needs as many
-        # passes as the steady loop to converge under hypervisor noise
-        "fused": _event_storm_stats(fused, keys, iters),
-        "two_pass": _event_storm_stats(two_pass, keys, iters),
-    }
+    if "event_storm" in run:
+        # event storm: one fleet event per batch — the recompile-free path
+        # must absorb them; the scalar path re-resolves its table either
+        # way.  The event list is net-zero (fail/recover and up/down pair
+        # off), so the best-of-N passes replay identical workloads.
+        s_ev_best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for ev, arg in EVENTS:
+                getattr(scalar, ev)(*(() if arg is None else (arg,)))
+                for k in skeys:
+                    scalar.domain.locate(int(k))
+            s_ev_best = min(s_ev_best, time.perf_counter() - t0)
+        s_ev_rate = len(EVENTS) * scalar_keys / s_ev_best
+        storm = {
+            "scalar": {"keys_per_sec": s_ev_rate},
+            # full iteration budget: the per-position minimum needs as many
+            # passes as the steady loop to converge under hypervisor noise
+            "fused": _event_storm_stats(fused, keys, iters),
+            "two_pass": _event_storm_stats(two_pass, keys, iters),
+        }
 
-    severity = {
-        "fused": _severity_sweep(keys, iters, fused=True),
-        "two_pass": _severity_sweep(keys, iters, fused=False),
-    }
-    multi_device = _multi_device_stats(batch, max(3, iters // 3))
-    end_to_end = _end_to_end_stats(e2e_sessions, iters)
+    if "severity" in run:
+        severity = {
+            "fused": _severity_sweep(keys, iters, fused=True),
+            "two_pass": _severity_sweep(keys, iters, fused=False),
+        }
+    if "multi_device" in run:
+        multi_device = _multi_device_stats(batch, max(3, iters // 3))
+    if "end_to_end" in run:
+        end_to_end = _end_to_end_stats(e2e_sessions, iters)
+    if "engines" in run:
+        engines = _engines_stats(keys, iters)
 
-    payload = {
-        "bench": "router",
-        "backend": jax.default_backend(),
-        "n_replicas": N_REPLICAS,
-        "batch_keys": batch,
-        "smoke": args.smoke,
-        "steady": steady,
-        "event_storm": storm,
-        "severity_sweep": severity,
-        "multi_device": multi_device,
-        "end_to_end": end_to_end,
-        "speedup": {
-            "fused_over_two_pass_steady": steady["two_pass"]["us_per_batch"]
-            / steady["fused"]["us_per_batch"],
-            "fused_over_two_pass_storm": storm["two_pass"]["us_per_batch"]
-            / storm["fused"]["us_per_batch"],
-            "fused_over_scalar_steady": steady["fused"]["keys_per_sec"]
-            / steady["scalar"]["keys_per_sec"],
-            "fused_storm_over_steady": storm["fused"]["us_per_batch"]
-            / steady["fused"]["us_per_batch"],
-            "fused_worst_severity_over_healthy": max(
-                severity["fused"][f"{f:.2f}"]["us_per_batch"] for f in SEVERITIES
-            )
-            / severity["fused"]["0.00"]["us_per_batch"],
-        },
-    }
-    # smoke runs land in gitignored benchmarks/out/ so they never clobber
-    # the tracked full-size (1M-key) record at the repo root
-    path = write_bench_json("router", payload, tracked=not args.smoke)
-    print(f"# wrote {path}")
+    if full:
+        payload = {
+            "bench": "router",
+            "backend": jax.default_backend(),
+            "n_replicas": N_REPLICAS,
+            "batch_keys": batch,
+            "smoke": args.smoke,
+            "steady": steady,
+            "event_storm": storm,
+            "severity_sweep": severity,
+            "multi_device": multi_device,
+            "end_to_end": end_to_end,
+            "engines": engines,
+            "speedup": {
+                "fused_over_two_pass_steady": steady["two_pass"]["us_per_batch"]
+                / steady["fused"]["us_per_batch"],
+                "fused_over_two_pass_storm": storm["two_pass"]["us_per_batch"]
+                / storm["fused"]["us_per_batch"],
+                "fused_over_scalar_steady": steady["fused"]["keys_per_sec"]
+                / steady["scalar"]["keys_per_sec"],
+                "fused_storm_over_steady": storm["fused"]["us_per_batch"]
+                / steady["fused"]["us_per_batch"],
+                "fused_worst_severity_over_healthy": max(
+                    severity["fused"][f"{f:.2f}"]["us_per_batch"] for f in SEVERITIES
+                )
+                / severity["fused"]["0.00"]["us_per_batch"],
+            },
+        }
+        # ONE canonical record per flavour: full runs write the tracked
+        # BENCH_router.json at the repo root, smoke runs the gitignored
+        # benchmarks/out/BENCH_router_smoke.json — never the same name twice
+        path = write_bench_json("router", payload, tracked=not args.smoke)
+        print(f"# wrote {path}")
+    else:
+        print(f"# sections={sorted(run)}: BENCH record / CSV skipped (full runs only)")
 
     rows = []
     for stream, tiers in (("steady", steady), ("event_storm", storm)):
+        if tiers is None:
+            continue
         for tier in ("scalar", "two_pass", "fused"):
             stats = tiers[tier]
             rate = stats["keys_per_sec"]
@@ -405,49 +497,73 @@ def main(argv: list[str] | None = None) -> None:
             us = stats.get("us_per_batch", 1e6 * batch / rate)
             rows.append([stream, tier, f"{rate:.0f}", f"{us:.1f}"])
             emit(f"router_{tier}_{stream}", 1e6 / rate, f"{rate:.0f} lookups/s")
-    for frac in SEVERITIES:
-        stats = severity["fused"][f"{frac:.2f}"]
-        rows.append([f"severity_{frac:.2f}", "fused",
-                     f"{stats['keys_per_sec']:.0f}", f"{stats['us_per_batch']:.1f}"])
+    if severity is not None:
+        for frac in SEVERITIES:
+            stats = severity["fused"][f"{frac:.2f}"]
+            rows.append([f"severity_{frac:.2f}", "fused",
+                         f"{stats['keys_per_sec']:.0f}", f"{stats['us_per_batch']:.1f}"])
+            emit(
+                f"router_fused_severity_{int(frac * 100):02d}",
+                stats["us_per_batch"],
+                f"{stats['removed_slots']} slots removed",
+            )
+    if steady is not None and storm is not None and severity is not None:
         emit(
-            f"router_fused_severity_{int(frac * 100):02d}",
-            stats["us_per_batch"],
-            f"{stats['removed_slots']} slots removed",
+            "router_fused_batch_steady",
+            steady["fused"]["us_per_batch"],
+            f"{steady['two_pass']['us_per_batch'] / steady['fused']['us_per_batch']:.2f}x "
+            f"vs two-pass, "
+            f"{steady['fused']['keys_per_sec'] / steady['scalar']['keys_per_sec']:.0f}x vs scalar",
         )
-    emit(
-        "router_fused_batch_steady",
-        steady["fused"]["us_per_batch"],
-        f"{payload['speedup']['fused_over_two_pass_steady']:.2f}x vs two-pass, "
-        f"{payload['speedup']['fused_over_scalar_steady']:.0f}x vs scalar",
-    )
-    emit(
-        "router_fused_storm_over_steady",
-        storm["fused"]["us_per_batch"],
-        f"{payload['speedup']['fused_storm_over_steady']:.3f}x steady us/batch",
-    )
-    for tier in ("host_loop", "vectorized", "fused_ingest_ids"):
-        stats = end_to_end[tier]
-        rows.append(["end_to_end", tier, f"{stats['sessions_per_sec']:.0f}",
-                     f"{stats['us_per_batch']:.1f}"])
         emit(
-            f"router_e2e_{tier}",
-            stats["us_per_batch"],
-            f"{stats['sessions_per_sec']:.0f} sessions/s",
+            "router_fused_storm_over_steady",
+            storm["fused"]["us_per_batch"],
+            f"{storm['fused']['us_per_batch'] / steady['fused']['us_per_batch']:.3f}x "
+            f"steady us/batch",
         )
-    emit(
-        "router_e2e_vectorized_speedup",
-        end_to_end["vectorized"]["us_per_batch"],
-        f"{end_to_end['speedup']['vectorized_over_host_loop']:.1f}x vs host loop, "
-        f"{end_to_end['speedup']['fused_ingest_over_host_loop']:.1f}x fused-ids",
-    )
-    if "error" not in multi_device:
+    if end_to_end is not None:
+        for tier in ("host_loop", "vectorized", "fused_ingest_ids"):
+            stats = end_to_end[tier]
+            rows.append(["end_to_end", tier, f"{stats['sessions_per_sec']:.0f}",
+                         f"{stats['us_per_batch']:.1f}"])
+            emit(
+                f"router_e2e_{tier}",
+                stats["us_per_batch"],
+                f"{stats['sessions_per_sec']:.0f} sessions/s",
+            )
+        emit(
+            "router_e2e_vectorized_speedup",
+            end_to_end["vectorized"]["us_per_batch"],
+            f"{end_to_end['speedup']['vectorized_over_host_loop']:.1f}x vs host loop, "
+            f"{end_to_end['speedup']['fused_ingest_over_host_loop']:.1f}x fused-ids",
+        )
+    if multi_device is not None and "error" not in multi_device:
         emit(
             "router_sharded_storm",
             multi_device["sharded_us_per_batch"],
             f"{multi_device['n_devices']} devices, "
             f"{multi_device['sharded_over_single']:.2f}x vs single",
         )
-    rows_to_csv("router", ["stream", "tier", "keys_per_sec", "us_per_batch"], rows)
+    if engines is not None:
+        base = engines["per_engine"].get("binomial")
+        for name, stats in sorted(engines["per_engine"].items()):
+            for kind in ("steady", "storm"):
+                rows.append([f"engine_{kind}", name,
+                             f"{stats[kind]['keys_per_sec']:.0f}",
+                             f"{stats[kind]['us_per_batch']:.1f}"])
+            rel = (
+                ""
+                if base is None or name == "binomial"
+                else f", {stats['steady']['us_per_batch'] / base['steady']['us_per_batch']:.2f}x binomial us"
+            )
+            emit(
+                f"router_engine_{name}_steady",
+                stats["steady"]["us_per_batch"],
+                f"{stats['steady']['keys_per_sec']:.0f} keys/s, "
+                f"storm {stats['storm_over_steady']:.2f}x{rel}",
+            )
+    if full:
+        rows_to_csv("router", ["stream", "tier", "keys_per_sec", "us_per_batch"], rows)
 
 
 if __name__ == "__main__":

@@ -26,12 +26,25 @@ the fused datapath:
   baseline's; at smoke sizes (where fixed dispatch overhead compresses the
   ratio) it must clear an absolute sanity floor instead — the vectorised
   ingest beating the host loop at all is the property being guarded.
+* **engine comparison** (when both records carry the ``engines`` section):
+  the section must still report at least two device engines (the
+  ``BULK_ENGINES`` protocol is the point of it), every baseline engine must
+  still be present, each engine's storm/steady ratio must stay within the
+  tolerance of the baseline's (scale-invariant: both sides of the ratio
+  share the batch and the machine), and — at matching batch sizes only —
+  each engine's absolute steady keys/s must too.
+
+The CANONICAL records: full runs (run.py) write the tracked
+``BENCH_router.json`` at the repo root; ``--smoke`` runs write the
+gitignored ``benchmarks/out/BENCH_router_smoke.json`` — which are exactly
+this tool's default ``--current`` and ``--baseline``.
 
 Usage (the CI bench smoke step):
 
     PYTHONPATH=src python -m benchmarks.bench_router --smoke
     python benchmarks/check_router_regression.py \
-        --current benchmarks/out/BENCH_router.json --baseline BENCH_router.json
+        --current benchmarks/out/BENCH_router_smoke.json \
+        --baseline BENCH_router.json
 """
 from __future__ import annotations
 
@@ -99,6 +112,7 @@ def check(current: dict, baseline: dict, tolerance: float) -> list[str]:
         )
 
     failures += _check_end_to_end(current, baseline, tolerance)
+    failures += _check_engines(current, baseline, tolerance)
     return failures
 
 
@@ -142,9 +156,61 @@ def _check_end_to_end(current: dict, baseline: dict, tolerance: float) -> list[s
     return []
 
 
+def _check_engines(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    if "engines" not in baseline:
+        print("baseline has no engines section (pre-protocol record): skipped")
+        return []
+    if "engines" not in current:
+        return ["current run is missing the engines comparison section"]
+    cur, base = current["engines"], baseline["engines"]
+    failures: list[str] = []
+    if len(cur["per_engine"]) < 2:
+        failures.append(
+            f"engines section reports {len(cur['per_engine'])} device "
+            "engine(s); the comparison needs at least 2"
+        )
+    missing = sorted(set(base["per_engine"]) - set(cur["per_engine"]))
+    if missing:
+        failures.append(f"device engines dropped from the comparison: {missing}")
+    sizes_match = cur.get("batch_keys") == base.get("batch_keys")
+    if not sizes_match:
+        print(
+            f"engines batch sizes differ (current {cur.get('batch_keys')} vs "
+            f"baseline {base.get('batch_keys')}): per-engine keys/s floors "
+            "skipped; the storm/steady ratios (both sides of each ratio share "
+            "the batch and the machine, so they are scale-invariant) still gate"
+        )
+    for name in sorted(set(base["per_engine"]) & set(cur["per_engine"])):
+        c, b = cur["per_engine"][name], base["per_engine"][name]
+        if sizes_match:
+            floor = float(b["steady"]["keys_per_sec"]) * (1 - tolerance)
+            got = float(c["steady"]["keys_per_sec"])
+            print(
+                f"engine '{name}' steady keys/s: current {got:,.0f} vs baseline "
+                f"{float(b['steady']['keys_per_sec']):,.0f} (floor {floor:,.0f})"
+            )
+            if got < floor:
+                failures.append(
+                    f"engine '{name}' steady keys/s regressed: {got:,.0f} < "
+                    f"floor {floor:,.0f}"
+                )
+        ratio_limit = float(b["storm_over_steady"]) * (1 + tolerance)
+        ratio = float(c["storm_over_steady"])
+        print(
+            f"engine '{name}' storm/steady ratio: current {ratio:.3f} vs "
+            f"baseline {float(b['storm_over_steady']):.3f} (limit {ratio_limit:.3f})"
+        )
+        if ratio > ratio_limit:
+            failures.append(
+                f"engine '{name}' storm/steady ratio regressed: {ratio:.3f} > "
+                f"{float(b['storm_over_steady']):.3f} * (1 + {tolerance:.0%})"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--current", default="benchmarks/out/BENCH_router.json")
+    ap.add_argument("--current", default="benchmarks/out/BENCH_router_smoke.json")
     ap.add_argument("--baseline", default="BENCH_router.json")
     ap.add_argument("--tolerance", type=float, default=0.30)
     args = ap.parse_args(argv)

@@ -27,16 +27,20 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def write_bench_json(name: str, payload: dict, tracked: bool = True) -> str:
-    """Write ``BENCH_<name>.json`` — machine-readable perf record.
+    """Write the machine-readable perf record for one bench.
 
-    ``tracked=True`` writes at the REPO ROOT, kept under version control so
+    ``tracked=True`` (full-size runs, e.g. via run.py) writes the CANONICAL
+    ``BENCH_<name>.json`` at the repo root, kept under version control so
     the perf trajectory is tracked PR over PR.  ``tracked=False`` (smoke /
-    reduced-size runs) writes into the gitignored benchmarks/out/ instead,
-    so a CI or verify smoke run never clobbers the tracked full-size record.
+    reduced-size runs) writes ``BENCH_<name>_smoke.json`` into the
+    gitignored benchmarks/out/ instead — a different name in a different
+    place, so a CI or verify smoke run can never clobber or shadow the
+    tracked record (``check_router_regression.py`` compares the two).
     """
     root = REPO_ROOT if tracked else OUT_DIR
     os.makedirs(root, exist_ok=True)
-    path = os.path.join(root, f"BENCH_{name}.json")
+    fname = f"BENCH_{name}.json" if tracked else f"BENCH_{name}_smoke.json"
+    path = os.path.join(root, fname)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -1,6 +1,12 @@
 """Benchmark aggregator — one bench per paper table/figure + framework-level
 benches. Prints ``name,us_per_call,derived`` CSV rows; per-bench CSVs land in
-benchmarks/out/."""
+benchmarks/out/.
+
+Full-size runs through here write the CANONICAL tracked perf records
+(``BENCH_<name>.json`` at the repo root, e.g. the router bench's record the
+CI regression guard compares against); smoke runs write distinct
+``benchmarks/out/BENCH_<name>_smoke.json`` files instead — one name, one
+place each."""
 from __future__ import annotations
 
 import sys

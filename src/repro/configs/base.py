@@ -21,8 +21,11 @@ class MoEConfig:
     router: str = "topk"  # topk | sigmoid | hash  (hash = BinomialHash routing)
     aux_loss_weight: float = 0.01
     capacity_factor: float = 1.25
-    router_hash_omega: int = 16  # ω for the binomial hash router
-    # hash router only: route via the traced-n lookup (binomial_lookup_dyn),
+    router_hash_omega: int = 16  # lookup iteration bound of the hash router
+    # hash router only: which BULK_ENGINES lookup routes tokens (binomial is
+    # the paper engine; jump selects the JumpHash device flavour)
+    router_hash_engine: str = "binomial"
+    # hash router only: route via the traced-n lookup (lookup_dyn),
     # so standalone/eager routing passes (placement studies, routing sweeps)
     # share one compiled router trace across expert counts. NOTE: inside a
     # jitted model step num_experts is still a static config field, so the

@@ -185,16 +185,30 @@ def _table_divert(
     return jnp.where(hit, slots.at[q].get(mode="promise_in_bounds"), b)
 
 
-def _route_table_impl(
+def _binomial_lookup_body(keys_u32: jax.Array, total: jax.Array, omega: int) -> jax.Array:
+    """The BinomialHash base-lookup body of the fused route: u32 keys +
+    traced n -> u32 buckets (n <= 1 collapses to bucket 0)."""
+    E = next_pow2_u32(total)
+    M = E >> 1
+    b = _unrolled_body(keys_u32, E, M, total, omega)
+    return jnp.where(total <= np.uint32(1), np.uint32(0), b)
+
+
+def fused_route_impl(
     keys: jax.Array,
     packed_mask: jax.Array,
     table: jax.Array,
     state: jax.Array,
     omega: int,
     n_words: int,
+    lookup=_binomial_lookup_body,
 ) -> jax.Array:
-    """Traceable body shared by ``binomial_memento_route`` (jit'd, CPU/GPU
-    fallback) and ``kernels.ref.binomial_route_ref`` (unjitted oracle).
+    """Traceable fused lookup + table-divert body, generic over the base
+    engine: ``lookup(keys_u32, n_total, omega) -> u32 buckets`` is the only
+    engine-specific piece (DESIGN.md §10); the replacement-table divert is
+    engine-agnostic.  Shared by the jit'd jnp mirrors (CPU/GPU fallback of
+    every ``BULK_ENGINES`` entry) and the unjitted test oracles in
+    ``repro.kernels.ref``.
 
     keys         any int shape S (uint32 key space)
     packed_mask  (1, W) uint32 bit-words — bit b set iff slot b removed
@@ -207,10 +221,7 @@ def _route_table_impl(
     keys_u32 = keys.reshape(-1).astype(jnp.uint32)
     total = state[0].astype(jnp.uint32)
     n_alive = state[1].astype(jnp.uint32)
-    E = next_pow2_u32(total)
-    M = E >> 1
-    b = _unrolled_body(keys_u32, E, M, total, omega)
-    b = jnp.where(total <= np.uint32(1), np.uint32(0), b)
+    b = lookup(keys_u32, total, omega)
 
     # Healthy-fleet fast path: one scalar compare skips the divert entirely,
     # so the steady-state fused cost degenerates to the base lookup alone.
@@ -225,6 +236,10 @@ def _route_table_impl(
         b,
     )
     return b.astype(jnp.int32).reshape(shape)
+
+
+#: backward-compatible name for the binomial-lookup flavour of the body
+_route_table_impl = fused_route_impl
 
 
 @functools.partial(jax.jit, static_argnames=("omega", "n_words"))

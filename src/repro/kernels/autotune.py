@@ -25,8 +25,9 @@ import os
 import time
 
 #: fallback when the autotuner is bypassed (explicit value, interpret mode,
-#: or the jnp fallback path, which has no block tiling at all)
-DEFAULT_BLOCK_ROWS = 512
+#: or the jnp fallback path, which has no block tiling at all) — the ONE
+#: definition; ``RouterSpec.resolved_block_rows`` resolves through it too
+from repro.core.bulk import DEFAULT_BLOCK_ROWS  # noqa: F401,E402
 
 #: candidate VMEM tilings: 64 KiB .. 1 MiB per in/out block at 4B x 128 lanes
 CANDIDATES = (128, 256, 512, 1024, 2048)

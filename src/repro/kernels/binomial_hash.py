@@ -67,6 +67,7 @@ from repro.core.binomial_jax import (
     mulhi32,
     next_pow2_u32,
 )
+from repro.core.memento_jax import _binomial_lookup_body
 
 LANES = 128  # TPU minor-dim tile
 
@@ -224,19 +225,19 @@ def binomial_bulk_lookup_pallas_dyn(
 
 def _fused_route_body(
     keys, state_ref, mask_ref, table_ref, *, omega: int, n_words: int,
-    n_slots: int,
+    n_slots: int, lookup=_binomial_lookup_body,
 ):
     """Shared fused lookup+divert body: u32 keys -> u32 replica ids.
 
     Factored out so the plain fused kernel (pre-hashed keys) and the ingest
-    kernel (u64 ids mixed in-kernel) run the exact same routing math.
+    kernel (u64 ids mixed in-kernel) run the exact same routing math — and
+    generic over the base engine: ``lookup(keys_u32, n_u32, omega)`` is the
+    only engine-specific piece (``repro.kernels.fused`` instantiates the
+    other ``BULK_ENGINES`` entries' kernels from this same body).
     """
     n = state_ref[0].astype(jnp.uint32)
     n_alive = state_ref[1].astype(jnp.uint32)
-    E = next_pow2_u32(n)
-    M = E >> 1
-    b = _unrolled_body(keys, E, M, n, omega)
-    b = jnp.where(n <= np.uint32(1), np.uint32(0), b)
+    b = lookup(keys, n, omega)
 
     def removed(bv):
         # select-cascade membership test over the packed bit-words: W scalar

@@ -1,0 +1,262 @@
+"""Generic fused-routing Pallas kernels — any ``BulkEngine`` lookup body +
+the replacement-table divert under ONE ``pallas_call``.
+
+``repro.kernels.binomial_hash`` holds the paper engine's hand-tuned kernels;
+this module is the machinery every *other* ``BULK_ENGINES`` entry gets its
+device kernels from (DESIGN.md §10): hand ``make_fused_kernels`` an unrolled
+jnp lookup body ``lookup(keys_u32, n_u32, omega) -> u32 buckets`` (usable
+inside a kernel: u32/f32 elementwise ops only, n <= 1 handled) and it
+returns the full kernel set with the exact operand contract of the binomial
+flavours —
+
+* ``route_2d`` / ``route_pallas``   — fused lookup + divert, pre-hashed keys;
+* ``ingest_2d`` / ``ingest_pallas`` — the u64-id ingest twins (limb-wise
+  splitmix64 mixed in-register, then the same body);
+* ``lookup_dyn_2d`` / ``lookup_dyn_pallas`` — the plain dynamic-n bulk
+  lookup (the two-pass baseline's first dispatch).
+
+All flavours keep the fleet state traced (scalar-prefetch ``[n_total,
+n_alive]``, whole-block VMEM mask + table), so fleet events never retrace —
+the same guarantees the binomial kernels make, inherited by construction
+because the divert body is literally ``binomial_hash._fused_route_body``
+with the lookup swapped.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.binomial_jax import mix64_lo32
+from repro.kernels.binomial_hash import LANES, _fused_route_body
+
+
+class FusedKernels(NamedTuple):
+    """The per-engine Pallas kernel set ``make_fused_kernels`` returns."""
+
+    route_2d: Callable
+    route_pallas: Callable
+    ingest_2d: Callable
+    ingest_pallas: Callable
+    lookup_dyn_2d: Callable
+    lookup_dyn_pallas: Callable
+
+
+def _check_2d(rows: int, lanes: int, block_rows: int) -> None:
+    if lanes != LANES:
+        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"rows ({rows}) must be a multiple of block_rows ({block_rows})"
+        )
+
+
+def _check_state_extents(packed_mask, table, n_words: int, n_slots: int) -> None:
+    if not 1 <= n_words <= packed_mask.shape[1]:
+        raise ValueError(f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]")
+    if not 1 <= n_slots <= table.shape[1]:
+        raise ValueError(f"n_slots ({n_slots}) must be in [1, {table.shape[1]}]")
+
+
+def _pad_flat(flat: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    total = flat.shape[0]
+    tile = block_rows * LANES
+    padded = (total + tile - 1) // tile * tile
+    if padded != total:
+        flat = jnp.pad(flat, (0, padded - total))
+    return flat, total
+
+
+def make_fused_kernels(lookup, name: str) -> FusedKernels:
+    """Build the device kernel set for one engine's lookup body.
+
+    ``lookup(keys_u32, n_u32, omega) -> u32`` must be traceable inside a
+    Pallas TPU kernel body (elementwise u32/f32 ops, no gathers) and map
+    n <= 1 to bucket 0 itself.  ``name`` brands the jitted wrappers for
+    debuggability.
+    """
+
+    def _kernel_route(
+        state_ref, mask_ref, table_ref, keys_ref, out_ref, *, omega, n_words, n_slots
+    ):
+        keys = keys_ref[...].astype(jnp.uint32)
+        b = _fused_route_body(
+            keys, state_ref, mask_ref, table_ref, omega=omega,
+            n_words=n_words, n_slots=n_slots, lookup=lookup,
+        )
+        out_ref[...] = b.astype(jnp.int32)
+
+    def _kernel_ingest(
+        state_ref, mask_ref, table_ref, lo_ref, hi_ref, out_ref, *, omega,
+        n_words, n_slots,
+    ):
+        keys = mix64_lo32(lo_ref[...], hi_ref[...])
+        b = _fused_route_body(
+            keys, state_ref, mask_ref, table_ref, omega=omega,
+            n_words=n_words, n_slots=n_slots, lookup=lookup,
+        )
+        out_ref[...] = b.astype(jnp.int32)
+
+    def _kernel_lookup_dyn(n_ref, keys_ref, out_ref, *, omega):
+        keys = keys_ref[...].astype(jnp.uint32)
+        out_ref[...] = lookup(keys, n_ref[0].astype(jnp.uint32), omega).astype(
+            jnp.int32
+        )
+
+    def _route_grid_spec(block_rows, mask_shape, table_shape, n_blocks):
+        return pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_blocks,),
+            in_specs=[
+                # whole-block mask/table: same small blocks every grid step
+                pl.BlockSpec(mask_shape, lambda i, s: (0, 0)),
+                pl.BlockSpec(table_shape, lambda i, s: (0, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+        )
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
+    )
+    def route_2d(
+        keys, packed_mask, table, state, n_words, n_slots,
+        omega=16, block_rows=512, interpret=False,
+    ):
+        """(rows, 128) u32 keys + fleet state -> (rows, 128) i32 replica ids."""
+        rows, lanes = keys.shape
+        _check_2d(rows, lanes, block_rows)
+        _check_state_extents(packed_mask, table, n_words, n_slots)
+        grid_spec = _route_grid_spec(
+            block_rows, packed_mask.shape, table.shape, rows // block_rows
+        )
+        return pl.pallas_call(
+            functools.partial(
+                _kernel_route, omega=omega, n_words=n_words, n_slots=n_slots
+            ),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            interpret=interpret,
+        )(
+            jnp.asarray(state, jnp.uint32).reshape(2),
+            packed_mask.astype(jnp.uint32),
+            table.astype(jnp.int32),
+            keys.astype(jnp.uint32),
+        )
+
+    def route_pallas(
+        keys, packed_mask, table, state, n_words, n_slots,
+        omega=16, block_rows=512, interpret=False,
+    ):
+        """Any-shape int keys + fleet state -> i32 replica ids, fused kernel."""
+        flat, total = _pad_flat(keys.reshape(-1).astype(jnp.uint32), block_rows)
+        out = route_2d(
+            flat.reshape(-1, LANES), packed_mask, table, state, n_words,
+            n_slots, omega=omega, block_rows=block_rows, interpret=interpret,
+        )
+        return out.reshape(-1)[:total].reshape(keys.shape)
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
+    )
+    def ingest_2d(
+        ids_lo, ids_hi, packed_mask, table, state, n_words, n_slots,
+        omega=16, block_rows=512, interpret=False,
+    ):
+        """(rows, 128) u32 id halves + fleet state -> (rows, 128) i32 ids."""
+        rows, lanes = ids_lo.shape
+        if ids_hi.shape != ids_lo.shape:
+            raise ValueError(
+                f"id halves must agree in shape, got {ids_lo.shape} vs {ids_hi.shape}"
+            )
+        _check_2d(rows, lanes, block_rows)
+        _check_state_extents(packed_mask, table, n_words, n_slots)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(rows // block_rows,),
+            in_specs=[
+                pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
+                pl.BlockSpec(table.shape, lambda i, s: (0, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+                pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
+        )
+        return pl.pallas_call(
+            functools.partial(
+                _kernel_ingest, omega=omega, n_words=n_words, n_slots=n_slots
+            ),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            interpret=interpret,
+        )(
+            jnp.asarray(state, jnp.uint32).reshape(2),
+            packed_mask.astype(jnp.uint32),
+            table.astype(jnp.int32),
+            ids_lo.astype(jnp.uint32),
+            ids_hi.astype(jnp.uint32),
+        )
+
+    def ingest_pallas(
+        ids_lo, ids_hi, packed_mask, table, state, n_words, n_slots,
+        omega=16, block_rows=512, interpret=False,
+    ):
+        """Any-shape u32 id halves + fleet state -> i32 ids, fused ingest."""
+        lo, total = _pad_flat(ids_lo.reshape(-1).astype(jnp.uint32), block_rows)
+        hi, _ = _pad_flat(ids_hi.reshape(-1).astype(jnp.uint32), block_rows)
+        out = ingest_2d(
+            lo.reshape(-1, LANES), hi.reshape(-1, LANES), packed_mask, table,
+            state, n_words, n_slots, omega=omega, block_rows=block_rows,
+            interpret=interpret,
+        )
+        return out.reshape(-1)[:total].reshape(ids_lo.shape)
+
+    @functools.partial(jax.jit, static_argnames=("omega", "block_rows", "interpret"))
+    def lookup_dyn_2d(keys, n, omega=16, block_rows=512, interpret=False):
+        """(rows, 128) u32 keys + traced n -> (rows, 128) i32 buckets."""
+        rows, lanes = keys.shape
+        _check_2d(rows, lanes, block_rows)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(rows // block_rows,),
+            in_specs=[pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0)),
+        )
+        return pl.pallas_call(
+            functools.partial(_kernel_lookup_dyn, omega=omega),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            interpret=interpret,
+        )(jnp.asarray(n, jnp.uint32).reshape(1), keys.astype(jnp.uint32))
+
+    def lookup_dyn_pallas(keys, n, omega=16, block_rows=512, interpret=False):
+        """Any-shape int keys + traced n -> i32 buckets (recompile-free)."""
+        flat, total = _pad_flat(keys.reshape(-1).astype(jnp.uint32), block_rows)
+        out = lookup_dyn_2d(
+            flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows,
+            interpret=interpret,
+        )
+        return out.reshape(-1)[:total].reshape(keys.shape)
+
+    for fn, suffix in (
+        (route_2d, "route_fused_2d"),
+        (route_pallas, "route_pallas_fused"),
+        (ingest_2d, "ingest_fused_2d"),
+        (ingest_pallas, "ingest_pallas_fused"),
+        (lookup_dyn_2d, "bulk_lookup_dyn_2d"),
+        (lookup_dyn_pallas, "bulk_lookup_pallas_dyn"),
+    ):
+        try:
+            fn.__name__ = f"{name}_{suffix}"
+        except AttributeError:  # jitted wrappers may refuse the rebrand
+            pass
+    return FusedKernels(
+        route_2d, route_pallas, ingest_2d, ingest_pallas,
+        lookup_dyn_2d, lookup_dyn_pallas,
+    )

@@ -31,7 +31,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.binomial_jax import binomial_lookup_dyn, binomial_lookup_vec, mix32
+from repro.core.binomial_jax import mix32
+from repro.core.registry import make_bulk
 from repro.models.layers.common import dense_init, init_mlp, apply_mlp
 from repro.sharding.rules import current_mesh, expert_layout, logical, shard, shard_map_compat
 
@@ -78,15 +79,19 @@ def route(p, x, token_ids, layer_salt, cfg: ArchConfig):
         k_salts = (np.arange(K) * 7919 + 1).astype(np.uint32)  # (K,)
         salts = (salt0 + k_salts) * GOLDEN32
         kk = mix32(keys[..., None] ^ salts)  # (B, S, K)
+        # which consistent-hash lookup routes tokens is a BULK_ENGINES
+        # choice (DESIGN.md §10) — same salted-key construction, pluggable
+        # lookup body, so engine comparisons share one dispatch shape
+        eng = make_bulk(m.router_hash_engine)
         if m.router_dynamic_n:
             # expert count as a traced operand of the router lookup: when
             # route() runs eagerly (routing sweeps, placement studies) one
             # compiled trace serves every E. Inside a jitted model step E
             # is a static config constant, so this cannot prevent the
             # enclosing step from retracing on resize.
-            expert_ids = binomial_lookup_dyn(kk, jnp.uint32(E), omega=m.router_hash_omega)
+            expert_ids = eng.lookup_dyn(kk, jnp.uint32(E), omega=m.router_hash_omega)
         else:
-            expert_ids = binomial_lookup_vec(kk, E, omega=m.router_hash_omega)
+            expert_ids = eng.lookup_vec(kk, E, omega=m.router_hash_omega)
         gates = jnp.full(expert_ids.shape, 1.0 / K, jnp.float32)
         return expert_ids, gates, jnp.float32(0.0)
 

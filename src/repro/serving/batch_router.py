@@ -1,32 +1,37 @@
 """Batched, recompile-free, storm-proof session routing — the serving-tier
-datapath.
+datapath, generic over the pluggable bulk engines (DESIGN.md §10).
 
 ``SessionRouter`` routes one session at a time through scalar Python
 (``FailureDomain.locate``); fine for a control plane, hopeless for a serving
 tier taking millions of lookups per second.  ``BatchRouter`` embeds a u32
-``SessionRouter`` (binomial32 base engine + replacement-table failure
-resolution) as its control plane — scalar lookups, stats and fleet-event
-bookkeeping all live there — and routes whole key batches on device in ONE
-dispatch (DESIGN.md §3, §7):
+``SessionRouter`` as its control plane — scalar lookups, stats and
+fleet-event bookkeeping all live there — and routes whole key batches on
+device in ONE dispatch (DESIGN.md §3, §7):
 
-    keys[N] --binomial_route_bulk--> replicas[N]   (fused lookup + divert)
+    keys[N] --route_bulk--> replicas[N]   (fused lookup + divert)
 
-The fused kernel takes the fleet state as *traced*, *device-resident*
-operands — ``[n_total, n_alive]`` as a scalar-prefetch/SMEM 2-vector, the
+Which consistent-hash algorithm runs inside that dispatch is the
+``RouterSpec.engine`` (``BatchRouter(engine="binomial")`` is the default;
+``engine="jump"`` selects the JumpHash device datapath): each
+``BULK_ENGINES`` entry pairs the device kernels with the scalar oracle
+flavour the embedded control plane runs, so device == scalar bit-exactness
+holds per engine (tests enforce).  The engine's fused kernel takes the
+fleet state as *traced*, *device-resident* operands — one ``FleetState``
+pytree: ``[n_total, n_alive]`` as a scalar-prefetch/SMEM 2-vector, the
 removed-slot set as a fixed-shape packed bit-table, and the MementoHash-
-style replacement table (``(1, capacity)`` i32 — the ``slots``
-permutation; ``pos`` stays host-side) in VMEM —
-so an arbitrary stream of scale-up / scale-down / fail / recover events
-re-uses one compiled executable per batch shape: zero retraces.  Removed
-buckets resolve through AT MOST TWO bounded table gathers instead of a
-data-dependent rejection walk, so an event storm costs the same per batch
-as a healthy fleet — the paper's constant-time guarantee carried through
-the compiled datapath *including* its failure path.  Fleet events update
-the device copies incrementally (a one-word bit flip + permutation swap on
-the host mirrors, then a few-KiB ``jax.device_put``, event-time only);
-``route_keys`` itself performs zero host->device state uploads and zero
-host round-trips — it accepts and returns ``jax.Array``
-(``route_keys_np`` / ``route_batch`` are the numpy convenience wrappers).
+style replacement table (``(1, capacity)`` i32 — the ``slots`` permutation;
+``pos`` stays host-side) in VMEM — so an arbitrary stream of scale-up /
+scale-down / fail / recover events re-uses one compiled executable per
+batch shape: zero retraces.  Removed buckets resolve through AT MOST TWO
+bounded table gathers instead of a data-dependent rejection walk, so an
+event storm costs the same per batch as a healthy fleet — the paper's
+constant-time guarantee carried through the compiled datapath *including*
+its failure path.  Fleet events update the device copies incrementally (a
+one-word bit flip + permutation swap on the host ``FleetState`` mirror,
+then a few-KiB ``jax.device_put``, event-time only); ``route_keys`` itself
+performs zero host->device state uploads and zero host round-trips — it
+accepts and returns ``jax.Array`` (``route_keys_np`` / ``route_batch`` are
+the numpy convenience wrappers).
 
 Multi-device hosts hand ``BatchRouter`` a mesh: key batches are then split
 across the mesh axis under one jitted ``shard_map`` (fleet state
@@ -34,9 +39,14 @@ replicated, per-device fused dispatch, no collectives — DESIGN.md §8) for
 near-linear keys/s scaling.  ``block_rows=None`` engages the measure-once
 persistent autotuner on Pallas backends (``repro.kernels.autotune``).
 
-The pre-fusion two-stage pipeline (``binomial_bulk_lookup_dyn`` then
+The pre-fusion two-stage pipeline (``lookup_bulk_dyn`` then
 ``memento_remap_table`` — two dispatches, ``buckets[N]`` materialised in
 HBM between them) is kept behind ``fused=False`` as the benchmark baseline.
+
+Configuration rides in one frozen ``RouterSpec`` (``BatchRouter(16,
+spec)``); the individual keyword arguments remain as sugar that builds the
+spec (``BatchRouter(16, engine="jump", capacity=128)``) — passing both is
+an error, not a merge.
 
 Bit-exactness (enforced by tests): for every key, the device path returns
 exactly what the embedded scalar router's ``domain.locate`` returns — the
@@ -44,56 +54,103 @@ scalar router is the oracle for the batched one.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bits
-from repro.core.memento_jax import (
-    mask_words,
-    memento_remap_table,
-    pack_removed_mask,
-    pack_table,
-)
+from repro.core.bulk import FleetState, RouterSpec
+from repro.core.memento_jax import memento_remap_table
+from repro.core.registry import make_bulk
 from repro.kernels import autotune
+from repro.kernels import ops
 from repro.kernels.binomial_hash import LANES
-from repro.kernels.ops import (
-    binomial_bulk_lookup_dyn,
-    binomial_route_bulk,
-    binomial_route_ingest_bulk,
-    make_sharded_route,
-)
 from repro.serving.router import SessionRouter, hash_session_ids
+
+#: "this keyword was not passed" sentinel — None is meaningful for several
+#: spec fields (use_pallas auto, block_rows autotune), so absence needs its
+#: own marker to detect spec-vs-kwargs conflicts
+_UNSET = object()
+
+
+def _check_block_rows(block_rows) -> None:
+    """The serving tier insists on whole sublane tiles; the raw kernel entry
+    points accept any divisor (tests tile tiny batches)."""
+    if block_rows is not None and (block_rows <= 0 or block_rows % 8):
+        raise ValueError(
+            f"block_rows must be a positive multiple of 8 (the i32 sublane "
+            f"tile), got {block_rows}; pass None to autotune"
+        )
 
 
 class BatchRouter:
-    """Route request batches through the fused single-dispatch kernel."""
+    """Route request batches through the fused single-dispatch kernel of a
+    pluggable bulk engine."""
 
     def __init__(
         self,
         n_replicas: int,
-        capacity: int | None = None,
-        omega: int = 16,
-        max_chain: int = 4096,
-        use_pallas: bool | None = None,
-        interpret: bool = False,
-        block_rows: int | None = None,
-        fused: bool = True,
+        spec: RouterSpec | None = None,
+        *,
         mesh=None,
-        shard_axis: str = "data",
-        donate_keys: bool = False,
+        fused: bool = True,
+        max_chain: int = 4096,
+        engine=_UNSET,
+        capacity=_UNSET,
+        omega=_UNSET,
+        use_pallas=_UNSET,
+        interpret=_UNSET,
+        block_rows=_UNSET,
+        shard_axis=_UNSET,
+        donate_keys=_UNSET,
     ):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
-        if capacity is None:
-            capacity = max(64, bits.next_pow2(2 * n_replicas))
-        if capacity < 1 or capacity & (capacity - 1):
-            raise ValueError(
-                f"capacity must be a power of two (got {capacity}); the packed "
-                "mask words and table lanes tile evenly only at pow2 capacities"
+        kwargs = {
+            name: value
+            for name, value in (
+                ("engine", engine),
+                ("capacity", capacity),
+                ("omega", omega),
+                ("use_pallas", use_pallas),
+                ("interpret", interpret),
+                ("block_rows", block_rows),
+                ("shard_axis", shard_axis),
+                ("donate_keys", donate_keys),
             )
-        if n_replicas > capacity:
-            raise ValueError(f"n_replicas ({n_replicas}) exceeds capacity ({capacity})")
+            if value is not _UNSET
+        }
+        if spec is not None:
+            if not isinstance(spec, RouterSpec):
+                raise TypeError(
+                    f"the second positional argument is the RouterSpec (got "
+                    f"{type(spec).__name__}); pre-spec positional callers "
+                    "should pass capacity and friends as keywords: "
+                    "BatchRouter(n, capacity=..., omega=...)"
+                )
+            if kwargs:
+                raise ValueError(
+                    f"pass either a RouterSpec or individual spec fields, not "
+                    f"both (got spec and {sorted(kwargs)})"
+                )
+        else:
+            if kwargs.get("capacity", _UNSET) is None:
+                kwargs.pop("capacity")  # explicit capacity=None = default
+            kwargs.setdefault(
+                "capacity", max(64, bits.next_pow2(2 * n_replicas))
+            )
+            # before RouterSpec(**kwargs): the spec's own weaker check
+            # (>= 1) would otherwise claim e.g. block_rows=0 first, with
+            # the wrong error message for this constructor's contract
+            _check_block_rows(kwargs.get("block_rows"))
+            spec = RouterSpec(**kwargs)  # validates capacity/omega
+        _check_block_rows(spec.block_rows)  # spec-mode path
+        if n_replicas > spec.capacity:
+            raise ValueError(
+                f"n_replicas ({n_replicas}) exceeds capacity ({spec.capacity})"
+            )
         if max_chain < 0:
             raise ValueError(
                 f"max_chain must be >= 0, got {max_chain}; note the table "
@@ -101,65 +158,90 @@ class BatchRouter:
                 "labels the (unused) chain budget — any value >= 0 routes "
                 "identically"
             )
-        if block_rows is not None and (block_rows <= 0 or block_rows % 8):
-            raise ValueError(
-                f"block_rows must be a positive multiple of 8 (the i32 sublane "
-                f"tile), got {block_rows}; pass None to autotune"
-            )
         if mesh is not None and not fused:
             raise ValueError(
                 "the two-pass baseline (fused=False) is single-host only; "
                 "the mesh-sharded datapath always runs the fused kernel"
             )
-        if donate_keys and mesh is None:
+        if spec.donate_keys and mesh is None:
             raise ValueError(
                 "donate_keys applies to the mesh-sharded datapath only; "
                 "pass a mesh or drop donate_keys"
             )
-        # control-plane truth: u32 engine + u32 table resolution (the device
-        # semantics); omega mirrors the device operand so scalar == batch
-        # holds for non-default values too.  max_chain is INERT under table
-        # resolution (hard two-redirect bound) — accepted and validated for
-        # API stability with the chain-mode library flavour, forwarded only
-        # so the control plane would stay bit-exact if flipped to chain mode.
+        self.spec = spec
+        self._bulk = make_bulk(spec.engine)  # fails loudly on unknown engines
+        # control-plane truth: the engine's u32 scalar oracle + u32 table
+        # resolution (the device semantics); omega mirrors the device
+        # operand so scalar == batch holds for non-default values too.
+        # max_chain is INERT under table resolution (hard two-redirect
+        # bound) — accepted and validated for API stability with the
+        # chain-mode library flavour, forwarded only so the control plane
+        # would stay bit-exact if flipped to chain mode.
         self.scalar = SessionRouter(
             n_replicas,
-            engine="binomial32",
+            engine=self._bulk.scalar_engine,
             chain_bits=32,
-            omega=omega,
+            omega=spec.omega,
             max_chain=max_chain,
             resolve="table",
         )
-        self.capacity = capacity
-        self.n_words = mask_words(capacity)
-        self.omega = omega
         self.max_chain = max_chain
-        self.use_pallas = use_pallas
-        self.interpret = interpret
-        self.block_rows = block_rows
         self.fused = fused
         self.mesh = mesh
-        self.shard_axis = shard_axis
-        self.donate_keys = donate_keys
-        self._n_shards = 1 if mesh is None else int(mesh.shape[shard_axis])
+        self._n_shards = 1 if mesh is None else int(mesh.shape[spec.shard_axis])
         #: per-batch-rows resolved block size (autotuner results memoised)
         self._tuned_rows: dict[int, int] = {}
+        #: per-block_rows dispatch specs (replace + re-validate once, not
+        #: per batch — route_keys does zero host work beyond the dispatch)
+        self._dispatch_specs: dict[int, RouterSpec] = {}
         #: per-(rows, block_rows) jitted sharded executables (mesh mode)
         self._sharded_route: dict[int, object] = {}
-        # canonical host mirrors of the device fleet state, mutated
-        # incrementally on fleet events
-        self._packed_host = pack_removed_mask((), capacity)
-        self._table_host = pack_table(self.domain.replacement_table, capacity)
-        # device-resident fleet state: pinned once here, then refreshed only
-        # on fleet events — never rebuilt or re-uploaded per batch.  Only the
-        # operands the selected datapath reads are maintained: packed words +
-        # table + state 2-vector (fused and two-pass remap), n scalar
-        # (two-pass lookup).
-        self._packed_dev: jax.Array | None = None
-        self._table_dev: jax.Array | None = None
-        self._state_dev: jax.Array | None = None
+        # canonical host mirror of the device fleet state, mutated
+        # incrementally on fleet events; the device twin is pinned once
+        # here, then refreshed only on fleet events — never rebuilt or
+        # re-uploaded per batch.  The two-pass baseline additionally keeps
+        # the n scalar its first dispatch reads.
+        self._fleet_host = FleetState.pack(self.domain, spec.capacity)
+        self._fleet_dev: FleetState | None = None
         self._n_dev: jax.Array | None = None
-        self._resync_device_state()
+        self._put_state()
+
+    # -- spec facade (the pre-spec attribute names, kept as properties) -----
+    @property
+    def engine(self) -> str:
+        return self.spec.engine
+
+    @property
+    def capacity(self) -> int:
+        return self.spec.capacity
+
+    @property
+    def n_words(self) -> int:
+        return self.spec.n_words
+
+    @property
+    def omega(self) -> int:
+        return self.spec.omega
+
+    @property
+    def use_pallas(self):
+        return self.spec.use_pallas
+
+    @property
+    def interpret(self) -> bool:
+        return self.spec.interpret
+
+    @property
+    def block_rows(self):
+        return self.spec.block_rows
+
+    @property
+    def shard_axis(self) -> str:
+        return self.spec.shard_axis
+
+    @property
+    def donate_keys(self) -> bool:
+        return self.spec.donate_keys
 
     @property
     def domain(self):
@@ -169,63 +251,63 @@ class BatchRouter:
     def stats(self):
         return self.scalar.stats
 
+    # the device FleetState leaves, as the historical attribute names
+    @property
+    def _packed_dev(self):
+        return None if self._fleet_dev is None else self._fleet_dev.packed
+
+    @property
+    def _table_dev(self):
+        return None if self._fleet_dev is None else self._fleet_dev.table
+
+    @property
+    def _state_dev(self):
+        return None if self._fleet_dev is None else self._fleet_dev.state
+
     # -- device-side fleet state -------------------------------------------
-    def _device_put(self, host_array):
+    def _device_put(self, host_tree):
         """Pin host state on device — replicated across the mesh if sharded."""
         if self.mesh is None:
-            return jax.device_put(host_array)
+            return jax.device_put(host_tree)
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        return jax.device_put(host_array, NamedSharding(self.mesh, P()))
+        return jax.device_put(host_tree, NamedSharding(self.mesh, P()))
 
     def _resync_device_state(self) -> None:
         """Rebuild the device operands from control-plane truth.
 
-        Used at construction and after scale-down (which may garbage-collect
-        removed-slot tombstones off the end of the slot space); fail/recover
-        take the incremental single-bit + permutation-swap path instead.
+        Used after scale-down (which may garbage-collect removed-slot
+        tombstones off the end of the slot space); fail/recover take the
+        incremental single-bit + permutation-swap path instead.
         """
-        self._packed_host = pack_removed_mask(self.domain.removed, self.capacity)
-        self._put_state()
+        self._fleet_host.resync(self.domain)  # includes the table/state pack
+        self._upload_state()
 
     def _put_state(self) -> None:
+        """Re-pack the ``FleetState`` mirror's table + state (the host
+        ``ReplacementTable`` is updated O(1) per event by the control
+        plane) and re-pin the device twin."""
+        self._fleet_host.update(self.domain)
+        self._upload_state()
+
+    def _upload_state(self) -> None:
         """Re-pin every device operand of the fleet state — event-time only,
         never per batch, and ONE ``device_put`` for the lot (a few KiB; the
         per-call fixed cost dominates at these sizes, so batching the
-        transfers keeps fleet events well under a millisecond).
-
-        The host ``ReplacementTable`` is updated O(1) per event by the
-        control plane; this just re-packs and re-uploads it.
-        """
-        self._table_host = pack_table(self.domain.replacement_table, self.capacity)
-        n, alive = self.domain.total_count, self.domain.alive_count
-        state_host = np.array([n, alive], dtype=np.uint32)
+        transfers keeps fleet events well under a millisecond)."""
         if self.fused:
-            self._packed_dev, self._table_dev, self._state_dev = self._device_put(
-                (self._packed_host, self._table_host, state_host)
-            )
+            self._fleet_dev = self._device_put(self._fleet_host)
         else:
-            self._packed_dev, self._table_dev, self._state_dev, self._n_dev = (
-                self._device_put(
-                    (self._packed_host, self._table_host, state_host, np.uint32(n))
-                )
+            self._fleet_dev, self._n_dev = self._device_put(
+                (self._fleet_host, np.uint32(self.domain.total_count))
             )
 
     def _set_removed_bit(self, replica: int, removed: bool) -> None:
         """Incremental fleet-event update: flip one mask bit, re-pin."""
-        word, bit = replica >> 5, np.uint32(1) << np.uint32(replica & 31)
-        if removed:
-            self._packed_host[0, word] |= bit
-        else:
-            self._packed_host[0, word] &= ~bit
+        self._fleet_host.set_removed(replica, removed)
         self._put_state()  # the permutation swapped O(1) entries
 
     # -- block-size resolution ----------------------------------------------
-    def _pallas_selected(self) -> bool:
-        if self.use_pallas is None:
-            return jax.default_backend() == "tpu"
-        return self.use_pallas
-
     def _resolve_block_rows(self, rows: int) -> int:
         """Static tiling for a batch of ``rows`` x128 keys.
 
@@ -234,9 +316,9 @@ class BatchRouter:
         measure-once autotuner picks per (backend, rows, capacity) and
         persists the verdict (DESIGN.md §7).
         """
-        if self.block_rows is not None:
-            return self.block_rows
-        if not self._pallas_selected() or self.interpret:
+        if self.spec.block_rows is not None:
+            return self.spec.block_rows
+        if not self.spec.pallas_selected() or self.spec.interpret:
             return autotune.DEFAULT_BLOCK_ROWS
         if rows not in self._tuned_rows:
             probe = np.zeros((rows * LANES,), dtype=np.uint32)
@@ -244,14 +326,28 @@ class BatchRouter:
             def measure(candidate: int) -> None:
                 jax.block_until_ready(self._dispatch(probe, candidate))
 
+            flavour = "fused" if self.fused else "two_pass"
+            if self.spec.engine != "binomial":
+                flavour = f"{self.spec.engine}_{flavour}"
             self._tuned_rows[rows] = autotune.tuned_block_rows(
                 jax.default_backend(),
                 rows,
-                self.capacity,
+                self.spec.capacity,
                 measure,
-                variant="fused" if self.fused else "two_pass",
+                variant=flavour,
             )
         return self._tuned_rows[rows]
+
+    def _dispatch_spec(self, block_rows: int) -> RouterSpec:
+        """The spec with the per-batch tiling resolved to a concrete int
+        (memoised — block_rows takes a handful of values per router)."""
+        if block_rows == self.spec.block_rows:
+            return self.spec
+        spec = self._dispatch_specs.get(block_rows)
+        if spec is None:
+            spec = dataclasses.replace(self.spec, block_rows=block_rows)
+            self._dispatch_specs[block_rows] = spec
+        return spec
 
     # -- routing ------------------------------------------------------------
     session_key = staticmethod(SessionRouter.session_key)
@@ -273,42 +369,24 @@ class BatchRouter:
 
     def _dispatch(self, keys_u32, block_rows: int) -> jax.Array:
         """Single-host dispatch of one batch at a given tiling."""
+        spec = self._dispatch_spec(block_rows)
         if self.fused:
-            return binomial_route_bulk(
-                keys_u32,
-                self._packed_dev,
-                self._table_dev,
-                self._state_dev,
-                n_words=self.n_words,
-                n_slots=self.capacity,
-                omega=self.omega,
-                use_pallas=self.use_pallas,
-                interpret=self.interpret,
-                block_rows=block_rows,
-            )
+            return ops.route_bulk(keys_u32, self._fleet_dev, spec)
         # pre-fusion two-pass pipeline (benchmark baseline): buckets[N]
         # round-trips through HBM between two dispatches
-        buckets = binomial_bulk_lookup_dyn(
-            keys_u32,
-            self._n_dev,
-            omega=self.omega,
-            use_pallas=self.use_pallas,
-            interpret=self.interpret,
-            block_rows=block_rows,
-        )
+        buckets = ops.lookup_bulk_dyn(keys_u32, self._n_dev, spec)
         return memento_remap_table(
             keys_u32,
             buckets,
-            self._packed_dev,
-            self._table_dev,
-            self._state_dev,
-            n_words=self.n_words,
+            self._fleet_dev.packed,
+            self._fleet_dev.table,
+            self._fleet_dev.state,
+            n_words=self.spec.n_words,
         )
 
     def _route_sharded(self, keys_u32, block_rows: int) -> jax.Array:
         """Mesh-sharded dispatch: keys split over the mesh axis, fleet state
         replicated, ONE jitted shard_map executable (DESIGN.md §8)."""
-        import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         shape = keys_u32.shape
@@ -322,25 +400,17 @@ class BatchRouter:
         if isinstance(flat, np.ndarray):
             # upload already sharded along the mesh axis — the executable
             # never has to re-lay it out, and the buffer is ours to donate
-            flat = jax.device_put(flat, NamedSharding(self.mesh, P(self.shard_axis)))
+            flat = jax.device_put(
+                flat, NamedSharding(self.mesh, P(self.spec.shard_axis))
+            )
         route = self._sharded_route.get(block_rows)
         if route is None:
-            route = make_sharded_route(
-                self.mesh,
-                self.shard_axis,
-                n_words=self.n_words,
-                n_slots=self.capacity,
-                omega=self.omega,
-                use_pallas=self.use_pallas,
-                interpret=self.interpret,
-                block_rows=block_rows,
-                donate_keys=self.donate_keys,
-            )
+            route = ops.make_sharded_route(self.mesh, self._dispatch_spec(block_rows))
             self._sharded_route[block_rows] = route
-        if self.donate_keys and not owned:
+        if self.spec.donate_keys and not owned:
             # donation consumes the buffer; never consume one the caller owns
             flat = jnp.asarray(flat).copy()
-        out = route(flat, self._packed_dev, self._table_dev, self._state_dev)
+        out = route(flat, self._fleet_dev)
         if pad:
             out = out[:total]
         return out.reshape(shape)
@@ -348,14 +418,14 @@ class BatchRouter:
     def route_keys(self, keys) -> jax.Array:
         """Pre-hashed keys (any int array) -> int32 replica ids, on device.
 
-        The hot path: ONE device dispatch (fused lookup + table divert
-        kernel; one jitted shard_map over the mesh when sharded), no host
-        round-trip — input ``jax.Array``s stay on device and the result is
-        returned as a ``jax.Array`` without synchronising.  Keys are
-        truncated to u32, identical to what the scalar u32 oracle
-        (``binomial_lookup32`` / the u32 table resolution) does with wide
-        keys.  Skips per-session movement bookkeeping; use ``route_batch``
-        for session-level observability, ``route_keys_np`` for numpy.
+        The hot path: ONE device dispatch (the engine's fused lookup +
+        table-divert kernel; one jitted shard_map over the mesh when
+        sharded), no host round-trip — input ``jax.Array``s stay on device
+        and the result is returned as a ``jax.Array`` without
+        synchronising.  Keys are truncated to u32, identical to what the
+        engine's scalar u32 oracle does with wide keys.  Skips per-session
+        movement bookkeeping; use ``route_batch`` for session-level
+        observability, ``route_keys_np`` for numpy.
         """
         keys_u32 = self._coerce_keys(keys)
         size = int(np.size(keys_u32))
@@ -382,7 +452,7 @@ class BatchRouter:
 
         The device ingest path (DESIGN.md §9): ids are split into u32 halves
         on the host (two cheap vectorised views) and the splitmix64 session
-        hash, the BinomialHash lookup and the table divert all run inside
+        hash, the engine's lookup and the table divert all run inside
         the SAME kernel — the ``keys[N]`` array the pre-hash path builds
         never exists.  Bit-exact with ``route_keys(hash_session_ids(ids))``.
         Single-host only (mesh users pre-hash and call ``route_keys``);
@@ -399,18 +469,8 @@ class BatchRouter:
         lo, hi = bits.np_split64(ids)
         rows = -(-int(ids.size) // LANES)
         block_rows = self._resolve_block_rows(rows)
-        out = binomial_route_ingest_bulk(
-            lo,
-            hi,
-            self._packed_dev,
-            self._table_dev,
-            self._state_dev,
-            n_words=self.n_words,
-            n_slots=self.capacity,
-            omega=self.omega,
-            use_pallas=self.use_pallas,
-            interpret=self.interpret,
-            block_rows=block_rows,
+        out = ops.route_ingest_bulk(
+            lo, hi, self._fleet_dev, self._dispatch_spec(block_rows)
         )
         self.stats.lookups += int(ids.size)
         return out
@@ -445,9 +505,9 @@ class BatchRouter:
     # flip one bit + re-pin the few-KiB table; scale-up re-pins table +
     # scalars; scale-down resyncs (tombstone GC can clear bits).
     def scale_up(self) -> int:
-        if self.domain.total_count >= self.capacity:
+        if self.domain.total_count >= self.spec.capacity:
             raise ValueError(
-                f"fleet at device-table capacity ({self.capacity}); "
+                f"fleet at device-table capacity ({self.spec.capacity}); "
                 "construct BatchRouter with a larger capacity"
             )
         r = self.scalar.scale_up()

@@ -60,13 +60,36 @@ class ServingTier:
         n_replicas: int,
         max_len: int = 64,
         mesh=None,
-        shard_axis: str = "data",
+        shard_axis: str | None = None,
+        engine: str | None = None,
+        router_spec=None,
     ):
         self.cfg = cfg
         self.max_len = max_len
         # a mesh shards the routing datapath across local devices (keys
-        # split over ``shard_axis``, fleet state replicated — DESIGN.md §8)
-        self.router = BatchRouter(n_replicas, mesh=mesh, shard_axis=shard_axis)
+        # split over ``shard_axis``, fleet state replicated — DESIGN.md §8);
+        # ``engine`` picks the bulk routing engine (any BULK_ENGINES entry).
+        # A full ``RouterSpec`` carries both fields itself, so combining it
+        # with either keyword is a conflict, not a merge (same rule as
+        # BatchRouter).
+        if router_spec is not None:
+            clash = [
+                k for k, v in (("engine", engine), ("shard_axis", shard_axis))
+                if v is not None
+            ]
+            if clash:
+                raise ValueError(
+                    f"pass either router_spec or {clash}, not both — the "
+                    "spec already carries those fields"
+                )
+            self.router = BatchRouter(n_replicas, router_spec, mesh=mesh)
+        else:
+            self.router = BatchRouter(
+                n_replicas,
+                engine="binomial" if engine is None else engine,
+                mesh=mesh,
+                shard_axis="data" if shard_axis is None else shard_axis,
+            )
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
 
     def serve(self, requests: list[Request]) -> dict[str, np.ndarray]:

@@ -191,7 +191,14 @@ EVENTS = [
 
 def test_route_keys_is_exactly_one_dispatch_per_batch(monkeypatch):
     """The fused path issues ONE device dispatch per batch and never touches
-    the two-pass entry points — asserted across scale/fail/recover events."""
+    the two-pass entry points — asserted across scale/fail/recover events.
+
+    The spec dispatcher resolves its engine bundle from ``BULK_ENGINES``
+    per call, so swapping the entry intercepts every dispatch."""
+    import dataclasses
+
+    from repro.core import registry
+
     router = BatchRouter(8, interpret=True, block_rows=8)
     keys = RNG.integers(0, 2**64, size=(4096,), dtype=np.uint64)
     router.route_keys(keys)  # compile once
@@ -206,10 +213,17 @@ def test_route_keys_is_exactly_one_dispatch_per_batch(monkeypatch):
     def forbidden(*a, **k):  # pragma: no cover - the assertion IS the test
         raise AssertionError("two-pass entry point reached on the fused path")
 
-    monkeypatch.setattr(ops, "binomial_route_pallas_fused", counting)
-    monkeypatch.setattr(ops, "binomial_bulk_lookup_pallas_dyn", forbidden)
-    monkeypatch.setattr(ops, "binomial_lookup_dyn", forbidden)
-    monkeypatch.setattr(br_mod, "binomial_bulk_lookup_dyn", forbidden)
+    monkeypatch.setitem(
+        registry.BULK_ENGINES,
+        "binomial",
+        dataclasses.replace(
+            registry.BULK_ENGINES["binomial"],
+            route_pallas=counting,
+            route=forbidden,  # interpret mode must take the kernel, not jnp
+            lookup_dyn=forbidden,
+            lookup_dyn_pallas=forbidden,
+        ),
+    )
     monkeypatch.setattr(br_mod, "memento_remap_table", forbidden)
 
     before = binomial_route_fused_2d._cache_size()

@@ -161,7 +161,12 @@ def test_hash_router_fused_k_matches_per_k_loop(dynamic, E, K):
 @pytest.mark.parametrize("dynamic", [False, True], ids=["static_E", "dynamic_E"])
 def test_hash_router_is_one_lookup_dispatch_for_all_k(dynamic, monkeypatch):
     """All K expert choices come from ONE router lookup call (the fused
-    (B,S,K) dispatch), not K — and only the matching flavour is touched."""
+    (B,S,K) dispatch), not K — and only the matching flavour is touched.
+
+    The router resolves its lookup from ``BULK_ENGINES`` per call, so
+    swapping the entry intercepts the dispatches."""
+    from repro.core import registry
+
     calls = {"vec": 0, "dyn": 0}
     real_vec, real_dyn = binomial_lookup_vec, binomial_lookup_dyn
 
@@ -173,8 +178,15 @@ def test_hash_router_is_one_lookup_dispatch_for_all_k(dynamic, monkeypatch):
         calls["dyn"] += 1
         return real_dyn(*a, **k)
 
-    monkeypatch.setattr(moe_mod, "binomial_lookup_vec", counting_vec)
-    monkeypatch.setattr(moe_mod, "binomial_lookup_dyn", counting_dyn)
+    monkeypatch.setitem(
+        registry.BULK_ENGINES,
+        "binomial",
+        dataclasses.replace(
+            registry.BULK_ENGINES["binomial"],
+            lookup_vec=counting_vec,
+            lookup_dyn=counting_dyn,
+        ),
+    )
     cfg = _cfg(router="hash", E=32, k=8)
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, router_dynamic_n=dynamic)
