@@ -1,0 +1,83 @@
+"""CLI for the constant-time certifier: ``python -m repro.analysis``.
+
+Runs the three static-analysis layers (jaxpr certifier, AST lint, HLO
+gate) and exits nonzero on any unwaived failure — this is the command the
+CI ``static-analysis`` job runs on every push, and the one to run locally
+before touching a kernel body (see DESIGN.md §11):
+
+    PYTHONPATH=src python -m repro.analysis --all-engines
+    PYTHONPATH=src python -m repro.analysis --engine binomial --skip-hlo
+    PYTHONPATH=src python -m repro.analysis --all-engines --report ct.json
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="machine-check the O(1) contract of every fused engine",
+    )
+    group = parser.add_mutually_exclusive_group(required=True)
+    group.add_argument(
+        "--all-engines",
+        action="store_true",
+        help="certify every registered BULK_ENGINES entry",
+    )
+    group.add_argument(
+        "--engine",
+        action="append",
+        metavar="NAME",
+        help="certify only this engine (repeatable)",
+    )
+    parser.add_argument(
+        "--skip-lint", action="store_true", help="skip the AST lint layer"
+    )
+    parser.add_argument(
+        "--skip-hlo",
+        action="store_true",
+        help="skip the HLO gate layer (the only layer that compiles)",
+    )
+    parser.add_argument(
+        "--no-chain-baseline",
+        action="store_true",
+        help="skip the chain-mode memento_remap waiver demonstration target",
+    )
+    parser.add_argument(
+        "--report",
+        metavar="PATH",
+        help="write the structured JSON report here (the CI artifact)",
+    )
+    parser.add_argument(
+        "--json",
+        action="store_true",
+        help="print the JSON report to stdout instead of the summary table",
+    )
+    args = parser.parse_args(argv)
+
+    from repro.analysis.certify import certify_all
+    from repro.analysis.hlo_gate import gate_all
+    from repro.analysis.lint import lint_paths
+
+    engines = None if args.all_engines else args.engine
+    report = certify_all(
+        engines, include_chain_baseline=not args.no_chain_baseline
+    )
+    if not args.skip_lint:
+        report.lint = lint_paths()
+    if not args.skip_hlo:
+        report.hlo = gate_all(engines)
+
+    if args.report:
+        path = pathlib.Path(args.report)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(report.to_json() + "\n")
+    print(report.to_json() if args.json else report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

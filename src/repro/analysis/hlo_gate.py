@@ -1,0 +1,189 @@
+"""Layer 3 — the HLO gate: certify the *compiled* fused route (DESIGN.md §11).
+
+The jaxpr certifier (layer 1) proves the trace is constant-time; this layer
+proves the property survives XLA.  Per engine, the fused jnp route is
+compiled (``jax.jit(...).lower(...).compile()``) for two fleet states at
+opposite event-severity extremes — a healthy fleet and a heavy-removal
+storm — and the optimized HLO text is parsed with the trip-count-aware
+walker from ``repro.roofline.hlo_parse``.  Three checks:
+
+``hlo-while-static``
+    Every ``while`` in the optimized module has a *recoverable static* trip
+    count (``known_trip_count`` backend config or the canonical counted-
+    loop condition).  ``while_trip_counts`` returning ``None`` for any loop
+    means XLA emitted control flow whose bound cannot be proven
+    data-independent — fail.
+
+``hlo-severity-flat``
+    The compiled op-kind histogram is identical for the healthy and the
+    storm fleet state.  Fleet state is a runtime operand, so the lowered
+    program must not change shape with it; a difference means some Python
+    branch specialised the trace on event severity — the O(events) cliff
+    the fused datapath exists to rule out.
+
+``hlo-op-budget``
+    Total optimized op count stays under the contract's budget — a coarse
+    backstop against silent lowering blow-ups (e.g. a gather unrolling
+    into per-slot selects).
+
+Compile-time is the cost here (~seconds per engine on CPU), so this layer
+runs per-engine on demand and in the CI gate, not inside the test suite's
+hot loop.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.report import FAIL, PASS, CheckResult, HloGateResult
+
+#: optimized-HLO op budget for one fused route dispatch (generous: the
+#: binomial route compiles to ~1.2k ops at ω=16 today)
+DEFAULT_MAX_OPS = 4096
+
+
+def _fleet_states(capacity: int):
+    """(healthy, storm) packed fleet operands for one capacity — identical
+    shapes/dtypes, opposite event severity (0 vs capacity/2 removals)."""
+    from repro.core.memento_jax import pack_removed_mask, table_width
+
+    width = table_width(capacity)
+
+    def build(removed: list[int]):
+        packed = pack_removed_mask(removed, capacity)
+        table = np.zeros((1, width), np.int32)
+        alive = [s for s in range(capacity) if s not in set(removed)]
+        table[0, : len(alive)] = alive
+        table[0, len(alive) : capacity] = removed
+        state = np.array([capacity, len(alive)], np.uint32)
+        return packed, table, state
+
+    healthy = build([])
+    storm = build(list(range(1, capacity, 2)))
+    return healthy, storm
+
+
+def _compiled_text(engine, keys, packed, table, state, omega, n_words) -> str:
+    fn = jax.jit(
+        lambda k, p, t, s: engine.route(k, p, t, s, omega=omega, n_words=n_words)
+    )
+    return fn.lower(keys, packed, table, state).compile().as_text()
+
+
+def _op_histogram(comps) -> dict[str, int]:
+    hist: dict[str, int] = collections.Counter()
+    for comp in comps.values():
+        for op in comp.ops:
+            hist[op.kind] += 1
+    return dict(hist)
+
+
+def gate_engine(
+    engine_name: str,
+    *,
+    capacity: int = 64,
+    batch: int = 2048,
+    omega: int = 16,
+    max_ops: int = DEFAULT_MAX_OPS,
+) -> HloGateResult:
+    """Run the three HLO checks on one engine's compiled fused route."""
+    from repro.core.memento_jax import mask_words
+    from repro.core.registry import make_bulk
+    from repro.roofline.hlo_parse import parse_module, while_trip_counts
+
+    eng = make_bulk(engine_name)
+    keys = np.zeros((batch,), np.uint32)
+    n_words = mask_words(capacity)
+    (h_packed, h_table, h_state), (s_packed, s_table, s_state) = _fleet_states(
+        capacity
+    )
+
+    healthy_text = _compiled_text(
+        eng, keys, h_packed, h_table, h_state, omega, n_words
+    )
+    storm_text = _compiled_text(eng, keys, s_packed, s_table, s_state, omega, n_words)
+
+    healthy_comps, _ = parse_module(healthy_text)
+    storm_comps, _ = parse_module(storm_text)
+    result = HloGateResult(engine=engine_name)
+    result.op_count = sum(len(c.ops) for c in healthy_comps.values())
+
+    # -- hlo-while-static ---------------------------------------------------
+    unbounded = [
+        (comp, op)
+        for comp, op, trips in while_trip_counts(healthy_comps)
+        if trips is None
+    ]
+    loops = while_trip_counts(healthy_comps)
+    if unbounded:
+        result.checks.append(
+            CheckResult(
+                "hlo-while-static",
+                FAIL,
+                "while loops without a recoverable static trip count: "
+                + ", ".join(f"{c}/%{o}" for c, o in unbounded),
+            )
+        )
+    else:
+        detail = (
+            f"{len(loops)} while loop(s), all with static trip counts "
+            + str([t for _, _, t in loops])
+            if loops
+            else "no while loops in the optimized module"
+        )
+        result.checks.append(CheckResult("hlo-while-static", PASS, detail))
+
+    # -- hlo-severity-flat --------------------------------------------------
+    h_hist, s_hist = _op_histogram(healthy_comps), _op_histogram(storm_comps)
+    if h_hist != s_hist:
+        diff = {
+            k: (h_hist.get(k, 0), s_hist.get(k, 0))
+            for k in sorted(set(h_hist) | set(s_hist))
+            if h_hist.get(k, 0) != s_hist.get(k, 0)
+        }
+        result.checks.append(
+            CheckResult(
+                "hlo-severity-flat",
+                FAIL,
+                f"compiled op histogram differs healthy vs storm: {diff} — "
+                "the trace specialised on fleet-event severity",
+            )
+        )
+    else:
+        result.checks.append(
+            CheckResult(
+                "hlo-severity-flat",
+                PASS,
+                f"op histogram identical across severity "
+                f"({result.op_count} ops, {capacity // 2} removals vs 0)",
+            )
+        )
+
+    # -- hlo-op-budget ------------------------------------------------------
+    if result.op_count > max_ops:
+        result.checks.append(
+            CheckResult(
+                "hlo-op-budget",
+                FAIL,
+                f"{result.op_count} optimized ops exceeds the {max_ops} budget",
+            )
+        )
+    else:
+        result.checks.append(
+            CheckResult(
+                "hlo-op-budget",
+                PASS,
+                f"{result.op_count} optimized ops within the {max_ops} budget",
+            )
+        )
+    return result
+
+
+def gate_all(engines: Optional[Iterable[str]] = None) -> list[HloGateResult]:
+    from repro.core.registry import BULK_ENGINES
+
+    names = list(engines) if engines is not None else sorted(BULK_ENGINES)
+    return [gate_engine(name) for name in names]

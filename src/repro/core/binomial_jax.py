@@ -208,7 +208,7 @@ def binomial_lookup_vec(keys: jax.Array, n: int, omega: int = 16) -> jax.Array:
     keys_u32 = keys.astype(jnp.uint32)
     if n <= 1:
         return jnp.zeros(keys.shape, dtype=jnp.int32)
-    l = (n - 1).bit_length()
+    l = (n - 1).bit_length()  # ct: host-ok — n is static (static_argnames)
     E = np.uint32(1 << l)
     M = np.uint32(1 << (l - 1))
     out = _unrolled_body(keys_u32, E, M, np.uint32(n), omega)

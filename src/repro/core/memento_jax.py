@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.markers import constant_time_waiver
 from repro.core.binomial_jax import (
     _unrolled_body,
     hash_iter,
@@ -96,6 +97,11 @@ def pack_table(table, capacity: int, lanes: int = MASK_LANES) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("max_chain",))
+@constant_time_waiver(
+    "paper-faithful chain-mode baseline: the Memento rejection walk is a "
+    "lax.while_loop by design, bounded by the static max_chain operand; "
+    "serving datapaths use the while-free table-mode engines instead"
+)
 def memento_remap(
     keys: jax.Array,
     buckets: jax.Array,

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: bulk BinomialHash lookup (keys[N] -> buckets[N]).
+"""Pallas TPU kernels: bulk BinomialHash lookup (keys[N] -> buckets[N]).
 
 TPU adaptation of the paper's scalar hot loop (DESIGN.md §3):
 * u32 integer arithmetic only (murmur3 fmix32 mixers) — the VPU has no
@@ -11,42 +11,36 @@ TPU adaptation of the paper's scalar hot loop (DESIGN.md §3):
   in/out block, comfortably inside the ~16 MiB VMEM budget with double
   buffering).
 
-The kernel body reuses the exact jnp math from ``repro.core.binomial_jax``,
-so kernel == ref == scalar-u32-oracle is enforced transitively by tests.
+Only the **static-n** flavour (``binomial_bulk_lookup_2d`` /
+``binomial_bulk_lookup_pallas`` — ``n`` baked into the trace, masks
+constant-fold, any cluster resize retraces) is hand-written here.  The
+serving datapath kernels are instantiated from the generic factory
+(``repro.kernels.fused.make_fused_kernels``) with the binomial lookup body
+— the SAME machinery every other ``BULK_ENGINES`` entry uses, so the
+constant-time certifier (``repro.analysis``) checks one uniform kernel
+shape per engine:
 
-Two flavours of the same kernel body:
-
-* **static-n** (``binomial_bulk_lookup_2d`` / ``binomial_bulk_lookup_pallas``)
-  — ``n`` is a Python int baked into the trace; masks constant-fold, but any
-  change to the cluster size retraces and recompiles;
 * **dynamic-n** (``binomial_bulk_lookup_dyn_2d`` /
   ``binomial_bulk_lookup_pallas_dyn``) — ``n`` rides in as a scalar-prefetch
-  operand (``pltpu.PrefetchScalarGridSpec``, landing in SMEM before the grid
-  body runs); ``E``/``M`` are derived in-kernel with the shift-or cascade, so
-  elastic scale-up/down and replica failures NEVER retrace.
-
-Plus the serving hot path built on the dynamic flavour:
-
-* **fused** (``binomial_route_fused_2d`` / ``binomial_route_pallas_fused``) —
-  the dynamic-n lookup *and* the replacement-table failure divert in one
-  kernel (DESIGN.md §3, §7).  ``[n_total, n_alive]`` is the scalar-prefetch
-  SMEM operand, the packed removed-slot mask and the (1, C) slots
-  permutation are whole-block VMEM operands, and final replica ids are written in
-  a single pass: no intermediate ``buckets[N]`` HBM round-trip, ONE device
-  dispatch per batch, and a storm-time cost equal to the steady-time cost
-  (at most two bounded table gathers per lane, never a rejection walk).
-  ``repro.serving.batch_router.BatchRouter`` routes whole request batches
-  through this kernel with device-resident fleet state — zero recompiles and
-  zero per-batch host->device state uploads across arbitrary scale/fail
-  event streams.
-
+  operand (SMEM before the grid body runs); ``E``/``M`` are derived
+  in-kernel with the shift-or cascade, so elastic scale-up/down and replica
+  failures NEVER retrace;
+* **fused** (``binomial_route_fused_2d`` / ``binomial_route_pallas_fused``)
+  — the dynamic-n lookup *and* the replacement-table failure divert in one
+  kernel (DESIGN.md §3, §7): ``[n_total, n_alive]`` scalar-prefetch SMEM,
+  packed removed-slot mask + (1, C) slots permutation as whole-block VMEM
+  operands, replica ids written in a single pass — no intermediate
+  ``buckets[N]`` HBM round-trip, ONE device dispatch per batch, storm-time
+  cost equal to steady-time cost;
 * **fused ingest** (``binomial_ingest_fused_2d`` /
   ``binomial_ingest_pallas_fused``) — the fused kernel with the session-key
   hash pulled inside too: raw u64 session ids ride in as (lo, hi) u32
   halves, the limb-wise splitmix64 (``binomial_jax.mix64_lo32``) derives
-  the u32 routing key in-register, and the identical lookup+divert body
-  finishes the job — id -> replica in ONE dispatch with no ``keys[N]``
-  array anywhere (DESIGN.md §9; ``BatchRouter.route_ids``).
+  the u32 routing key in-register — id -> replica in ONE dispatch with no
+  ``keys[N]`` array anywhere (DESIGN.md §9; ``BatchRouter.route_ids``).
+
+The kernel bodies reuse the exact jnp math from ``repro.core.binomial_jax``,
+so kernel == ref == scalar-u32-oracle is enforced transitively by tests.
 """
 from __future__ import annotations
 
@@ -56,27 +50,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.binomial_jax import (
-    GOLDEN32,
-    _unrolled_body,
-    hash_pair,
-    mix32,
-    mix64_lo32,
-    mulhi32,
-    next_pow2_u32,
-)
+from repro.core.binomial_jax import _unrolled_body
 from repro.core.memento_jax import _binomial_lookup_body
-
-LANES = 128  # TPU minor-dim tile
+from repro.kernels.fused import (  # noqa: F401  (re-exported for back-compat)
+    LANES,
+    _fused_route_body,
+    make_fused_kernels,
+)
 
 
 def _kernel(keys_ref, out_ref, *, n: int, omega: int):
     keys = keys_ref[...]
-    l = (n - 1).bit_length()
-    E = np.uint32(1 << l)
-    M = np.uint32(1 << (l - 1))
+    l = (n - 1).bit_length()  # ct: host-ok — n is a static Python int
+    E = np.uint32(1 << l)  # ct: host-ok
+    M = np.uint32(1 << (l - 1))  # ct: host-ok
     out = _unrolled_body(keys.astype(jnp.uint32), E, M, np.uint32(n), omega)
     out_ref[...] = out.astype(jnp.int32)
 
@@ -131,384 +119,22 @@ def binomial_bulk_lookup_pallas(
 
 
 # ---------------------------------------------------------------------------
-# dynamic-n flavour: n is a scalar-prefetch operand, never baked into the
-# trace — elastic resize / failure events reuse one compiled executable.
+# serving-datapath kernels: ONE factory call replaces the hand-written
+# dynamic-n / fused / fused-ingest pallas_call plumbing (operand contracts,
+# jit static_argnames and numerics are identical by construction — the
+# factory body IS the former hand-written body, parameterised on the
+# lookup; tests pin kernel == jnp mirror == scalar oracle bit-for-bit).
 # ---------------------------------------------------------------------------
 
+_KERNELS = make_fused_kernels(_binomial_lookup_body, "binomial")
 
-def _kernel_dyn(n_ref, keys_ref, out_ref, *, omega: int):
-    # E/M derived from the prefetched SMEM scalar with the same shift-or
-    # cascade as binomial_lookup_dyn (shared helper keeps kernel == ref).
-    n = n_ref[0].astype(jnp.uint32)
-    E = next_pow2_u32(n)
-    M = E >> 1
-    keys = keys_ref[...]
-    out = _unrolled_body(keys.astype(jnp.uint32), E, M, n, omega)
-    out = jnp.where(n <= np.uint32(1), np.uint32(0), out)
-    out_ref[...] = out.astype(jnp.int32)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("omega", "block_rows", "interpret")
-)
-def binomial_bulk_lookup_dyn_2d(
-    keys: jax.Array,
-    n: jax.Array,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """(rows, 128) uint32 keys + traced scalar n -> (rows, 128) int32 buckets.
-
-    ``n`` may be a Python int, a 0-d array or a (1,)-array; it is traced, so
-    calling again with a different cluster size hits the same executable.
-    """
-    rows, lanes = keys.shape
-    if lanes != LANES:
-        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
-    if rows % block_rows != 0:
-        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
-    grid = (rows // block_rows,)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0))],
-        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, n_ref: (i, 0)),
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel_dyn, omega=omega),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
-        interpret=interpret,
-    )(jnp.asarray(n, jnp.uint32).reshape(1), keys.astype(jnp.uint32))
-
-
-def binomial_bulk_lookup_pallas_dyn(
-    keys: jax.Array,
-    n: jax.Array,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """Any-shape int keys + traced n -> int32 buckets (recompile-free resize)."""
-    flat = keys.reshape(-1).astype(jnp.uint32)
-    total = flat.shape[0]
-    tile = block_rows * LANES
-    padded = (total + tile - 1) // tile * tile
-    if padded != total:
-        flat = jnp.pad(flat, (0, padded - total))
-    out = binomial_bulk_lookup_dyn_2d(
-        flat.reshape(-1, LANES), n, omega=omega, block_rows=block_rows, interpret=interpret
-    )
-    return out.reshape(-1)[:total].reshape(keys.shape)
-
-
-# ---------------------------------------------------------------------------
-# fused flavour: BinomialHash lookup + replacement-table divert in ONE kernel.
-# The serving hot path — no intermediate buckets[N] HBM round-trip, one
-# dispatch per batch.  Fleet state rides as traced operands:
-#   * [n_total, n_alive]  — scalar-prefetch (SMEM before the grid runs);
-#   * packed removed mask — (1, W) u32 bit-words, whole-block VMEM operand
-#     re-used by every grid step (W = capacity/32 words, lane-padded);
-#   * replacement table   — (1, C) i32 slots permutation, whole-block VMEM
-#     operand (DESIGN.md §7), rebuilt incrementally at fleet-event time.
-# Removed buckets resolve via two bounded hash rounds and EXACTLY ONE table
-# read (the MementoHash-style divert) instead of a data-dependent rejection
-# walk, so storm-time block cost equals steady-time cost.  The VPU has no
-# vector gather, so the table read is a select cascade over the C static
-# entries (and membership over the W mask words); the divert's range
-# reductions use the Lemire mulhi32 mul+shift (the VPU has no integer
-# divide either).  With no removed slots a single `jnp.any` skips the whole
-# divert, so the healthy-fleet cost is the base lookup alone.
-# ---------------------------------------------------------------------------
-
-
-def _fused_route_body(
-    keys, state_ref, mask_ref, table_ref, *, omega: int, n_words: int,
-    n_slots: int, lookup=_binomial_lookup_body,
-):
-    """Shared fused lookup+divert body: u32 keys -> u32 replica ids.
-
-    Factored out so the plain fused kernel (pre-hashed keys) and the ingest
-    kernel (u64 ids mixed in-kernel) run the exact same routing math — and
-    generic over the base engine: ``lookup(keys_u32, n_u32, omega)`` is the
-    only engine-specific piece (``repro.kernels.fused`` instantiates the
-    other ``BULK_ENGINES`` entries' kernels from this same body).
-    """
-    n = state_ref[0].astype(jnp.uint32)
-    n_alive = state_ref[1].astype(jnp.uint32)
-    b = lookup(keys, n, omega)
-
-    def removed(bv):
-        # select-cascade membership test over the packed bit-words: W scalar
-        # broadcasts + selects, no vector gather needed.  Cheaper than the
-        # n_slots-wide table cascade — this is why the kernel keeps the mask
-        # operand: the steady-state skip test touches W words, not C slots.
-        w = bv >> np.uint32(5)
-        word = jnp.zeros_like(bv)
-        for s in range(n_words):
-            word = jnp.where(w == np.uint32(s), mask_ref[0, s], word)
-        return ((word >> (bv & np.uint32(31))) & np.uint32(1)) != 0
-
-    def gather(idx):
-        # select-cascade "gather" from the slots permutation: C scalar
-        # broadcasts + selects per read (idx is always < n_total <= C).
-        out = jnp.zeros_like(idx)
-        for s in range(n_slots):
-            out = jnp.where(
-                idx == np.uint32(s), table_ref[0, s].astype(jnp.uint32), out
-            )
-        return out
-
-    hit = removed(b)
-
-    def divert(bb):
-        # ReplacementTable.resolve, lane-wise: two bounded redirects, the
-        # Lemire mulhi32 reduction in place of a modulo (the VPU has no
-        # integer divide, and mulhi32 is ~11 mul/shift/add ops), then ONE
-        # table read.
-        h = hash_pair(mix32(keys + GOLDEN32), bb)  # hash_iter(key, 1) folded
-        q = mulhi32(h, n)
-        deep = q >= n_alive  # a removed position: one more redirect settles it
-        # second hash chains off the first (h is well mixed; one pair-mix)
-        q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
-        return jnp.where(hit, gather(q), bb)
-
-    return jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)
-
-
-def _kernel_fused(
-    state_ref, mask_ref, table_ref, keys_ref, out_ref, *, omega: int,
-    n_words: int, n_slots: int,
-):
-    keys = keys_ref[...].astype(jnp.uint32)
-    b = _fused_route_body(
-        keys, state_ref, mask_ref, table_ref, omega=omega, n_words=n_words,
-        n_slots=n_slots,
-    )
-    out_ref[...] = b.astype(jnp.int32)
-
-
-def _kernel_ingest(
-    state_ref, mask_ref, table_ref, lo_ref, hi_ref, out_ref, *, omega: int,
-    n_words: int, n_slots: int,
-):
-    # u64 ids -> u32 routing keys via the limb-wise splitmix64 (the VPU has
-    # no 64-bit datapath), then the identical fused lookup+divert body: the
-    # whole request->replica map in ONE kernel, no key array in HBM.
-    keys = mix64_lo32(lo_ref[...], hi_ref[...])
-    b = _fused_route_body(
-        keys, state_ref, mask_ref, table_ref, omega=omega, n_words=n_words,
-        n_slots=n_slots,
-    )
-    out_ref[...] = b.astype(jnp.int32)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
-)
-def binomial_route_fused_2d(
-    keys: jax.Array,
-    packed_mask: jax.Array,
-    table: jax.Array,
-    state: jax.Array,
-    n_words: int,
-    n_slots: int,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """(rows, 128) u32 keys + fleet state -> (rows, 128) int32 replica ids.
-
-    One ``pallas_call`` — base lookup *and* failure divert.  ``state`` is
-    the (2,) u32 ``[n_total, n_alive]`` scalar-prefetch operand;
-    ``packed_mask`` is the (1, W) u32 removed-slot bit-table
-    (``repro.core.memento_jax.pack_removed_mask``); ``table`` is the (1, C)
-    i32 slots permutation (``repro.core.memento_jax.pack_table``).
-    ``n_words`` / ``n_slots`` are the static payload extents (capacity/32
-    mask words, capacity table slots) bounding the select cascades.
-    Everything dynamic is traced, so fleet events never retrace.
-    """
-    rows, lanes = keys.shape
-    if lanes != LANES:
-        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
-    if rows % block_rows != 0:
-        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
-    if not 1 <= n_words <= packed_mask.shape[1]:
-        raise ValueError(
-            f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]"
-        )
-    if not 1 <= n_slots <= table.shape[1]:
-        raise ValueError(
-            f"n_slots ({n_slots}) must be in [1, {table.shape[1]}]"
-        )
-    grid = (rows // block_rows,)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            # whole-block mask/table: same small blocks for every grid step
-            pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
-            pl.BlockSpec(table.shape, lambda i, s: (0, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
-    )
-    return pl.pallas_call(
-        functools.partial(
-            _kernel_fused, omega=omega, n_words=n_words, n_slots=n_slots
-        ),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
-        interpret=interpret,
-    )(
-        jnp.asarray(state, jnp.uint32).reshape(2),
-        packed_mask.astype(jnp.uint32),
-        table.astype(jnp.int32),
-        keys.astype(jnp.uint32),
-    )
-
-
-def binomial_route_pallas_fused(
-    keys: jax.Array,
-    packed_mask: jax.Array,
-    table: jax.Array,
-    state: jax.Array,
-    n_words: int,
-    n_slots: int,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """Any-shape int keys + fleet state -> int32 replica ids, fused kernel."""
-    flat = keys.reshape(-1).astype(jnp.uint32)
-    total = flat.shape[0]
-    tile = block_rows * LANES
-    padded = (total + tile - 1) // tile * tile
-    if padded != total:
-        flat = jnp.pad(flat, (0, padded - total))
-    out = binomial_route_fused_2d(
-        flat.reshape(-1, LANES),
-        packed_mask,
-        table,
-        state,
-        n_words,
-        n_slots,
-        omega=omega,
-        block_rows=block_rows,
-        interpret=interpret,
-    )
-    return out.reshape(-1)[:total].reshape(keys.shape)
-
-
-# ---------------------------------------------------------------------------
-# fused ingest flavour: raw u64 session ids -> replica ids in ONE kernel.
-# The ids arrive as (lo, hi) u32 halves (the VPU has no 64-bit datapath);
-# the limb-wise splitmix64 (`mix64_lo32`, ~30 VPU ops) derives the u32
-# routing key in-register and feeds the SAME fused lookup+divert body — no
-# intermediate keys[N] array ever exists, on-chip or in HBM (DESIGN.md §9).
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_words", "n_slots", "omega", "block_rows", "interpret"),
-)
-def binomial_ingest_fused_2d(
-    ids_lo: jax.Array,
-    ids_hi: jax.Array,
-    packed_mask: jax.Array,
-    table: jax.Array,
-    state: jax.Array,
-    n_words: int,
-    n_slots: int,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """(rows, 128) u32 id halves + fleet state -> (rows, 128) i32 replica ids.
-
-    The ingest twin of ``binomial_route_fused_2d``: two key blocks in (the
-    u64 id split into u32 limbs), one replica block out, hash + lookup +
-    divert under one ``pallas_call``.  Same operand contract otherwise.
-    """
-    rows, lanes = ids_lo.shape
-    if ids_hi.shape != ids_lo.shape:
-        raise ValueError(
-            f"id halves must agree in shape, got {ids_lo.shape} vs {ids_hi.shape}"
-        )
-    if lanes != LANES:
-        raise ValueError(f"minor dim must be {LANES}, got {lanes}")
-    if rows % block_rows != 0:
-        raise ValueError(f"rows ({rows}) must be a multiple of block_rows ({block_rows})")
-    if not 1 <= n_words <= packed_mask.shape[1]:
-        raise ValueError(
-            f"n_words ({n_words}) must be in [1, {packed_mask.shape[1]}]"
-        )
-    if not 1 <= n_slots <= table.shape[1]:
-        raise ValueError(
-            f"n_slots ({n_slots}) must be in [1, {table.shape[1]}]"
-        )
-    grid = (rows // block_rows,)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(packed_mask.shape, lambda i, s: (0, 0)),
-            pl.BlockSpec(table.shape, lambda i, s: (0, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0)),
-    )
-    return pl.pallas_call(
-        functools.partial(
-            _kernel_ingest, omega=omega, n_words=n_words, n_slots=n_slots
-        ),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
-        interpret=interpret,
-    )(
-        jnp.asarray(state, jnp.uint32).reshape(2),
-        packed_mask.astype(jnp.uint32),
-        table.astype(jnp.int32),
-        ids_lo.astype(jnp.uint32),
-        ids_hi.astype(jnp.uint32),
-    )
-
-
-def binomial_ingest_pallas_fused(
-    ids_lo: jax.Array,
-    ids_hi: jax.Array,
-    packed_mask: jax.Array,
-    table: jax.Array,
-    state: jax.Array,
-    n_words: int,
-    n_slots: int,
-    omega: int = 16,
-    block_rows: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """Any-shape u32 id halves + fleet state -> i32 replica ids, fused ingest."""
-    lo = ids_lo.reshape(-1).astype(jnp.uint32)
-    hi = ids_hi.reshape(-1).astype(jnp.uint32)
-    total = lo.shape[0]
-    tile = block_rows * LANES
-    padded = (total + tile - 1) // tile * tile
-    if padded != total:
-        lo = jnp.pad(lo, (0, padded - total))
-        hi = jnp.pad(hi, (0, padded - total))
-    out = binomial_ingest_fused_2d(
-        lo.reshape(-1, LANES),
-        hi.reshape(-1, LANES),
-        packed_mask,
-        table,
-        state,
-        n_words,
-        n_slots,
-        omega=omega,
-        block_rows=block_rows,
-        interpret=interpret,
-    )
-    return out.reshape(-1)[:total].reshape(ids_lo.shape)
+#: fused lookup + replacement-table divert, (rows, 128) layout (DESIGN §3, §7)
+binomial_route_fused_2d = _KERNELS.route_2d
+#: any-shape fused routing entry point (pad/reshape wrapper)
+binomial_route_pallas_fused = _KERNELS.route_pallas
+#: fused u64-id ingest twins — splitmix64 limb mix + lookup + divert (DESIGN §9)
+binomial_ingest_fused_2d = _KERNELS.ingest_2d
+binomial_ingest_pallas_fused = _KERNELS.ingest_pallas
+#: plain dynamic-n bulk lookup (the two-pass baseline's first dispatch)
+binomial_bulk_lookup_dyn_2d = _KERNELS.lookup_dyn_2d
+binomial_bulk_lookup_pallas_dyn = _KERNELS.lookup_dyn_pallas

@@ -1,13 +1,13 @@
 """Generic fused-routing Pallas kernels — any ``BulkEngine`` lookup body +
 the replacement-table divert under ONE ``pallas_call``.
 
-``repro.kernels.binomial_hash`` holds the paper engine's hand-tuned kernels;
-this module is the machinery every *other* ``BULK_ENGINES`` entry gets its
-device kernels from (DESIGN.md §10): hand ``make_fused_kernels`` an unrolled
-jnp lookup body ``lookup(keys_u32, n_u32, omega) -> u32 buckets`` (usable
-inside a kernel: u32/f32 elementwise ops only, n <= 1 handled) and it
-returns the full kernel set with the exact operand contract of the binomial
-flavours —
+This module is the machinery EVERY ``BULK_ENGINES`` entry gets its device
+kernels from (DESIGN.md §10) — the binomial paper engine included
+(``repro.kernels.binomial_hash`` instantiates it alongside its static-n
+extras): hand ``make_fused_kernels`` an unrolled jnp lookup body
+``lookup(keys_u32, n_u32, omega) -> u32 buckets`` (usable inside a kernel:
+u32/f32 elementwise ops only, n <= 1 handled) and it returns the full
+kernel set —
 
 * ``route_2d`` / ``route_pallas``   — fused lookup + divert, pre-hashed keys;
 * ``ingest_2d`` / ``ingest_pallas`` — the u64-id ingest twins (limb-wise
@@ -16,10 +16,11 @@ flavours —
   lookup (the two-pass baseline's first dispatch).
 
 All flavours keep the fleet state traced (scalar-prefetch ``[n_total,
-n_alive]``, whole-block VMEM mask + table), so fleet events never retrace —
-the same guarantees the binomial kernels make, inherited by construction
-because the divert body is literally ``binomial_hash._fused_route_body``
-with the lookup swapped.
+n_alive]``, whole-block VMEM mask + table), so fleet events never retrace;
+the divert body is the one ``_fused_route_body`` below with the lookup
+swapped, so every engine presents the SAME kernel shape — which is also
+what lets the constant-time certifier (``repro.analysis``) check one
+uniform structure per engine instead of per-engine plumbing.
 """
 from __future__ import annotations
 
@@ -28,11 +29,74 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.binomial_jax import mix64_lo32
-from repro.kernels.binomial_hash import LANES, _fused_route_body
+from repro.core.binomial_jax import (
+    GOLDEN32,
+    hash_pair,
+    mix32,
+    mix64_lo32,
+    mulhi32,
+)
+from repro.core.memento_jax import _binomial_lookup_body
+
+LANES = 128  # TPU minor-dim tile
+
+
+def _fused_route_body(
+    keys, state_ref, mask_ref, table_ref, *, omega: int, n_words: int,
+    n_slots: int, lookup=_binomial_lookup_body,
+):
+    """Shared fused lookup+divert body: u32 keys -> u32 replica ids.
+
+    Factored out so the plain fused kernel (pre-hashed keys) and the ingest
+    kernel (u64 ids mixed in-kernel) run the exact same routing math — and
+    generic over the base engine: ``lookup(keys_u32, n_u32, omega)`` is the
+    only engine-specific piece (``make_fused_kernels`` instantiates every
+    ``BULK_ENGINES`` entry's kernels from this same body).
+    """
+    n = state_ref[0].astype(jnp.uint32)
+    n_alive = state_ref[1].astype(jnp.uint32)
+    b = lookup(keys, n, omega)
+
+    def removed(bv):
+        # select-cascade membership test over the packed bit-words: W scalar
+        # broadcasts + selects, no vector gather needed.  Cheaper than the
+        # n_slots-wide table cascade — this is why the kernel keeps the mask
+        # operand: the steady-state skip test touches W words, not C slots.
+        w = bv >> np.uint32(5)
+        word = jnp.zeros_like(bv)
+        for s in range(n_words):
+            word = jnp.where(w == np.uint32(s), mask_ref[0, s], word)
+        return ((word >> (bv & np.uint32(31))) & np.uint32(1)) != 0
+
+    def gather(idx):
+        # select-cascade "gather" from the slots permutation: C scalar
+        # broadcasts + selects per read (idx is always < n_total <= C).
+        out = jnp.zeros_like(idx)
+        for s in range(n_slots):
+            out = jnp.where(
+                idx == np.uint32(s), table_ref[0, s].astype(jnp.uint32), out
+            )
+        return out
+
+    hit = removed(b)
+
+    def divert(bb):
+        # ReplacementTable.resolve, lane-wise: two bounded redirects, the
+        # Lemire mulhi32 reduction in place of a modulo (the VPU has no
+        # integer divide, and mulhi32 is ~11 mul/shift/add ops), then ONE
+        # table read.
+        h = hash_pair(mix32(keys + GOLDEN32), bb)  # hash_iter(key, 1) folded
+        q = mulhi32(h, n)
+        deep = q >= n_alive  # a removed position: one more redirect settles it
+        # second hash chains off the first (h is well mixed; one pair-mix)
+        q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
+        return jnp.where(hit, gather(q), bb)
+
+    return jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)
 
 
 class FusedKernels(NamedTuple):

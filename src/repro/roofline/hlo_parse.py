@@ -153,16 +153,28 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     return 2.0 * out * contracted
 
 
-def _trip_count(cond: Computation, attrs: str) -> int:
+def _trip_count_strict(cond: Computation | None, attrs: str) -> int | None:
+    """Static trip count of a lowered ``while``, or ``None`` when it cannot
+    be recovered — i.e. the loop bound is not provably data-independent.
+
+    Two recovery routes, in order: the compiler's own
+    ``known_trip_count`` backend config (XLA annotates every loop it proves
+    counted; a data-dependent loop never carries it), then the canonical
+    counted-loop shape ``compare(induction, constant(N)) direction=LT``
+    with an *integer-typed* constant — induction variables are s32/u32, so
+    a float compare is a data threshold, not a trip bound.  Anything else
+    returns ``None`` — the HLO gate treats that as a data-dependent loop
+    on the hot path.
+    """
     m = _TRIP_CFG.search(attrs)
     if m:
         return int(m.group(1))
-    # recover from the condition: compare(induction, constant(N)) / LT
+    if cond is None:
+        return None
     consts = {}
     for op in cond.ops:
-        cm = _CONST_VAL.search(op.kind + "(" + op.rest)
-        if op.kind == "constant":
-            vm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+        if op.kind == "constant" and re.match(r"[su]\d+\[", op.shape):
+            vm = _CONST_VAL.search("constant(" + op.rest)
             if vm:
                 consts[op.name] = int(vm.group(1))
     for op in cond.ops:
@@ -170,7 +182,29 @@ def _trip_count(cond: Computation, attrs: str) -> int:
             for n in _OPERAND.findall(_split_operands_attrs(op.rest)[0]):
                 if n in consts:
                     return consts[n]
-    return 1
+    return None
+
+
+def _trip_count(cond: Computation, attrs: str) -> int:
+    trips = _trip_count_strict(cond, attrs)
+    return 1 if trips is None else trips
+
+
+def while_trip_counts(comps: dict) -> list[tuple[str, str, int | None]]:
+    """Every ``while`` op in the module as ``(computation, op name, trips)``
+    with ``trips=None`` when the static trip count is unrecoverable.  The
+    constant-time HLO gate (``repro.analysis.hlo_gate``) asserts this list
+    contains no ``None`` for the compiled fused route."""
+    out: list[tuple[str, str, int | None]] = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind != "while":
+                continue
+            _operands, attrs = _split_operands_attrs(op.rest)
+            cm = re.search(r"condition=%([\w.\-]+)", attrs)
+            cond = comps.get(cm.group(1)) if cm else None
+            out.append((comp.name, op.name, _trip_count_strict(cond, attrs)))
+    return out
 
 
 @dataclass

@@ -66,7 +66,7 @@ from repro.core.memento_jax import memento_remap_table
 from repro.core.registry import make_bulk
 from repro.kernels import autotune
 from repro.kernels import ops
-from repro.kernels.binomial_hash import LANES
+from repro.kernels.fused import LANES
 from repro.serving.router import SessionRouter, hash_session_ids
 
 #: "this keyword was not passed" sentinel — None is meaningful for several

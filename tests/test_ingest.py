@@ -10,7 +10,8 @@ import pytest
 
 from repro.core import bits
 from repro.core.binomial_jax import mix64_lo32
-from repro.core.memento_jax import mask_words, pack_removed_mask, pack_table
+from repro.core.bulk import FleetState, RouterSpec
+from repro.core.memento_jax import pack_removed_mask, pack_table
 from repro.kernels import ops
 from repro.kernels.ref import binomial_ingest_route_ref
 from repro.serving.batch_router import BatchRouter
@@ -171,15 +172,18 @@ def test_fused_ingest_paths_agree_with_scalar_oracle():
     ids = RNG.integers(0, 2**64, size=2048, dtype=np.uint64)
     lo, hi = bits.np_split64(ids)
     expect = [dom.locate(bits.mix64(int(i))) for i in ids]
-    kw = dict(n_words=mask_words(64), n_slots=64)
-    jnp_out = ops.binomial_route_ingest_bulk(
-        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(packed),
-        jnp.asarray(table), jnp.asarray(state), use_pallas=False, **kw,
+    fleet = FleetState(
+        packed=jnp.asarray(packed),
+        table=jnp.asarray(table),
+        state=jnp.asarray(state),
     )
-    pl_out = ops.binomial_route_ingest_bulk(
-        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(packed),
-        jnp.asarray(table), jnp.asarray(state), interpret=True, block_rows=4,
-        **kw,
+    jnp_out = ops.route_ingest_bulk(
+        jnp.asarray(lo), jnp.asarray(hi), fleet,
+        RouterSpec(capacity=64, use_pallas=False),
+    )
+    pl_out = ops.route_ingest_bulk(
+        jnp.asarray(lo), jnp.asarray(hi), fleet,
+        RouterSpec(capacity=64, interpret=True, block_rows=4),
     )
     ref_out = binomial_ingest_route_ref(lo, hi, packed, table, state)
     np.testing.assert_array_equal(np.asarray(jnp_out), expect)
