@@ -32,7 +32,17 @@ the fused datapath:
   still be present, each engine's storm/steady ratio must stay within the
   tolerance of the baseline's (scale-invariant: both sides of the ratio
   share the batch and the machine), and — at matching batch sizes only —
-  each engine's absolute steady keys/s must too.
+  each engine's absolute steady keys/s must too.  On top of the relative
+  drift check, EVERY engine's storm/steady ratio is held under a **hard
+  1.25x cap** at full batch sizes (>= 1M keys, where per-dispatch overhead
+  has amortised out): the committed baseline must satisfy it
+  unconditionally, and any full-size current run must too — a storm batch
+  through the divert path costs at most 25% over a healthy one.
+* **chaos record** (``--chaos-current``, from ``bench_chaos``): zero
+  invariant violations is a HARD gate (alive-only routing, minimal
+  disruption, typed unavailability, journal replay parity — a violation is
+  a correctness bug, not a perf regression), overall availability has a
+  floor, and flap scenarios must have produced recovery-latency samples.
 
 The CANONICAL records: full runs (run.py) write the tracked
 ``BENCH_router.json`` at the repo root; ``--smoke`` runs write the
@@ -156,6 +166,15 @@ def _check_end_to_end(current: dict, baseline: dict, tolerance: float) -> list[s
     return []
 
 
+#: hard ceiling on every engine's storm/steady batch-time ratio — the
+#: constant-time divert's whole point.  Enforced at full batch sizes only
+#: (>= CAP_MIN_BATCH keys): below that, fixed per-dispatch overhead sits in
+#: both numerator and denominator and the ratio stops being a property of
+#: the datapath
+STORM_RATIO_CAP = 1.25
+CAP_MIN_BATCH = 1 << 20
+
+
 def _check_engines(current: dict, baseline: dict, tolerance: float) -> list[str]:
     if "engines" not in baseline:
         print("baseline has no engines section (pre-protocol record): skipped")
@@ -205,6 +224,51 @@ def _check_engines(current: dict, baseline: dict, tolerance: float) -> list[str]
                 f"engine '{name}' storm/steady ratio regressed: {ratio:.3f} > "
                 f"{float(b['storm_over_steady']):.3f} * (1 + {tolerance:.0%})"
             )
+        # the hard cap: the tracked baseline always answers for it, and so
+        # does any full-size current run
+        for label, record, r in (
+            ("baseline", base, float(b["storm_over_steady"])),
+            ("current", cur, ratio),
+        ):
+            if int(record.get("batch_keys") or 0) >= CAP_MIN_BATCH and r > STORM_RATIO_CAP:
+                failures.append(
+                    f"engine '{name}' {label} storm/steady ratio {r:.3f} "
+                    f"breaks the hard {STORM_RATIO_CAP:.2f}x cap"
+                )
+    return failures
+
+
+#: chaos-record gates: violations are correctness bugs (hard zero);
+#: availability dips only because cascade scenarios drive the fleet through
+#: a (typed, correct) n_alive == 0 — the floor catches anything worse
+CHAOS_AVAILABILITY_FLOOR = 0.90
+
+
+def check_chaos(chaos: dict) -> list[str]:
+    failures: list[str] = []
+    viol = int(chaos["invariant_violations"])
+    avail = float(chaos["availability"])
+    lat = chaos["recovery_latency_s"]
+    print(
+        f"chaos: {chaos['scenarios']} scenarios, {chaos['events']} events, "
+        f"{viol} violation(s), availability {avail:.4f}, "
+        f"recovery p50 {lat['p50']}s p99 {lat['p99']}s ({lat['samples']} samples)"
+    )
+    if viol:
+        failures.append(
+            f"chaos harness reports {viol} invariant violation(s): "
+            + "; ".join(chaos.get("violation_samples", [])[:3])
+        )
+    if avail < CHAOS_AVAILABILITY_FLOOR:
+        failures.append(
+            f"chaos availability {avail:.4f} below the "
+            f"{CHAOS_AVAILABILITY_FLOOR:.2f} floor"
+        )
+    if not lat["samples"]:
+        failures.append(
+            "chaos record has no recovery-latency samples (flap scenarios "
+            "never re-admitted a failed replica)"
+        )
     return failures
 
 
@@ -213,6 +277,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--current", default="benchmarks/out/BENCH_router_smoke.json")
     ap.add_argument("--baseline", default="BENCH_router.json")
     ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument(
+        "--chaos-current", default=None,
+        help="bench_chaos record to gate (e.g. benchmarks/out/"
+             "BENCH_chaos_smoke.json in CI, BENCH_chaos.json for full runs)",
+    )
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -221,6 +290,9 @@ def main(argv: list[str] | None = None) -> int:
         baseline = json.load(f)
 
     failures = check(current, baseline, args.tolerance)
+    if args.chaos_current:
+        with open(args.chaos_current) as f:
+            failures += check_chaos(json.load(f))
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -433,6 +433,40 @@ def certify_chain_baseline(
     )
 
 
+def certify_lifecycle_route(
+    engine_name: str, contract: Optional[EngineContract] = None
+) -> TargetReport:
+    """Certify the route entry EXACTLY as the serving tier dispatches it:
+    a ``LifecycleManager``-wrapped ``BatchRouter`` with an active storm
+    state (tombstones + coalesced recovery already applied).
+
+    The lifecycle layer (detector poll, journaling, coalescing, degradation
+    guards) is host-side control plane by design — this target proves it:
+    the traced device computation reached through the wrapped router must
+    satisfy the same invariants as the bare engine datapaths (no
+    data-dependent loops, no host callbacks, zero hot-path uploads), i.e.
+    the robustness machinery adds NOTHING to the device hot path.
+    """
+    contract = contract or contract_for(engine_name)
+    keys = np.zeros((contract.batch,), np.uint32)
+
+    def tracer(om):
+        from repro.core.bulk import RouterSpec
+        from repro.serving.batch_router import BatchRouter
+        from repro.serving.lifecycle import LifecycleManager
+
+        spec = RouterSpec(engine=engine_name, capacity=contract.capacity, omega=om)
+        router = BatchRouter(8, spec)
+        mgr = LifecycleManager(router)
+        # a real storm, applied through the manager: tombstones present,
+        # one coalesced device refresh behind us — the state the divert
+        # path actually runs against
+        mgr.apply([("fail", 1), ("fail", 3), ("recover", 1), ("fail", 5)])
+        return jax.make_jaxpr(mgr.router.route_keys)(keys)
+
+    return certify_callable(engine_name, "route/lifecycle", tracer, contract=contract)
+
+
 def certify_all(
     engines: Optional[Iterable[str]] = None, *, include_chain_baseline: bool = True
 ) -> Report:
@@ -443,6 +477,7 @@ def certify_all(
     report = Report()
     for name in names:
         report.targets.extend(certify_engine(name))
+        report.targets.append(certify_lifecycle_route(name))
     if include_chain_baseline:
         report.targets.append(certify_chain_baseline())
     return report

@@ -56,16 +56,17 @@ class ReplacementTable:
 
     Lookup for a key whose base bucket ``b`` is removed (``resolve``):
 
-    1. ``q = mulhi32(hash(key, b, iter=1), n_total)`` — the Lemire
+    1. ``q = mulhi32(hash_pair(key, b), n_total)`` — the Lemire
        reduction maps the u32 hash uniformly onto the position space
        (mul+shift only: no integer divide, which the TPU VPU lacks and
        which costs ~10x these ops with a vector divisor on XLA:CPU).  If
        ``q < n_alive`` the redirect lands alive and we are done
        (probability ``n_alive / n_total``).
-    2. otherwise ONE more redirect, ``q = mulhi32(hash_pair(h, q),
+    2. otherwise ONE more redirect, ``q = mulhi32(mix32(h ^ q*GOLDEN32),
        n_alive)`` — uniform over the alive prefix, alive by construction.
        It chains off the first hash ``h`` and is seeded by the *position*
-       q, so no extra mixing of the key is spent on the deep round.
+       q, so no extra mixing of the key is spent on the deep round: one
+       fmix32 over the already-avalanched ``h`` suffices.
 
     One ``slots`` gather, two u32 hashes, zero data-dependent iteration:
     the device kernels implement the identical math on an uploaded copy of
@@ -135,12 +136,15 @@ class ReplacementTable:
         pair/iter mixers as the device kernels (bit-exact by construction).
         """
         key &= bits.MASK32
-        h = bits.hash_pair32(bits.hash_iter32(key, 1), b)
+        h = bits.hash_pair32(key, b)
         q = bits.mulhi32(h, self.n_total)
         if q >= self.n_alive:
-            # chain the second hash off the first — h is already well mixed,
-            # so one pair-mix over the position q suffices
-            q = bits.mulhi32(bits.hash_pair32(h, q), self.n_alive)
+            # chain the second hash off the first — h is already avalanched,
+            # so one fmix32 over h xor the golden-scaled position suffices
+            q = bits.mulhi32(
+                bits.mix32((h ^ ((q * bits.GOLDEN32) & bits.MASK32)) & bits.MASK32),
+                self.n_alive,
+            )
         return self.slots[q]
 
 
@@ -155,6 +159,7 @@ class MementoWrapper:
         max_chain: int = 4096,
         chain_bits: int = 64,
         resolve: str = "chain",
+        allow_empty: bool = False,
     ):
         """``base_factory(n) -> engine`` builds the underlying LIFO engine.
 
@@ -162,6 +167,14 @@ class MementoWrapper:
         ``resolve="table"`` resolves removed slots through the
         ``ReplacementTable`` in at most two redirects (the serving-datapath
         semantics; ``max_chain`` is then irrelevant to lookups).
+
+        ``allow_empty=True`` lets the LAST alive bucket fail too (the slot
+        space never shrinks below one slot — the removal is tombstoned, so
+        recovery works): an all-failed fleet is then a queryable *state*
+        (``size == 0``; lookups raise) instead of a forbidden transition.
+        The serving tier uses this to answer routes on an all-failed fleet
+        with a typed ``FleetUnavailableError`` rather than refusing the
+        failure event itself, which no real outage asks permission for.
         """
         if chain_bits not in (32, 64):
             raise ValueError(f"chain_bits must be 32 or 64, got {chain_bits}")
@@ -173,6 +186,7 @@ class MementoWrapper:
         self.max_chain = max_chain
         self.chain_bits = chain_bits
         self.resolve = resolve
+        self.allow_empty = allow_empty
         self.table = ReplacementTable(n) if resolve == "table" else None
 
     # -- size/state ---------------------------------------------------------
@@ -198,7 +212,20 @@ class MementoWrapper:
     def remove_bucket(self, b: int | None = None) -> int:
         """Remove an arbitrary bucket (failure) or the last one (LIFO)."""
         if self.size <= 1:
-            raise ValueError("cannot remove the last alive bucket")
+            if not self.allow_empty:
+                raise ValueError("cannot remove the last alive bucket")
+            if self.size == 0:
+                raise ValueError("no alive buckets left to remove")
+            # the last alive bucket fails: tombstone it (even when it is the
+            # last slot id — a LIFO shrink here would empty the slot space,
+            # and the fixed-capacity device operands need n_total >= 1)
+            last = self.n_total - 1 if b is None else b
+            if last in self.removed or not (0 <= last < self.n_total):
+                raise ValueError(f"bucket {last} is not alive")
+            self.removed.add(last)
+            if self.table is not None:
+                self.table.fail(last)
+            return last
         if b is None or b == self.n_total - 1:
             # true LIFO removal — shrink the base engine; also garbage-collect
             # any tombstones that fall off the end.
@@ -242,6 +269,11 @@ class MementoWrapper:
         raise ValueError("no alive buckets")
 
     def get_bucket(self, key: int) -> int:
+        if not self.size:
+            # every bucket is a tombstone (allow_empty fleets only): there
+            # is no alive target — the serving layer turns this into a
+            # typed FleetUnavailableError before any lookup gets here
+            raise ValueError("no alive buckets")
         b = self.base.get_bucket(key)
         if b not in self.removed:
             return b

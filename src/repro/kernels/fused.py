@@ -89,11 +89,11 @@ def _fused_route_body(
         # Lemire mulhi32 reduction in place of a modulo (the VPU has no
         # integer divide, and mulhi32 is ~11 mul/shift/add ops), then ONE
         # table read.
-        h = hash_pair(mix32(keys + GOLDEN32), bb)  # hash_iter(key, 1) folded
+        h = hash_pair(keys, bb)
         q = mulhi32(h, n)
         deep = q >= n_alive  # a removed position: one more redirect settles it
-        # second hash chains off the first (h is well mixed; one pair-mix)
-        q = jnp.where(deep, mulhi32(hash_pair(h, q), n_alive), q)
+        # second hash chains off the first (h is avalanched; one fmix32)
+        q = jnp.where(deep, mulhi32(mix32(h ^ (q * GOLDEN32)), n_alive), q)
         return jnp.where(hit, gather(q), bb)
 
     return jax.lax.cond(jnp.any(hit), divert, lambda bb: bb, b)

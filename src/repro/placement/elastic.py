@@ -76,6 +76,7 @@ class FailureDomain:
         omega: int | None = None,
         max_chain: int = 4096,
         resolve: str = "chain",
+        allow_empty: bool = False,
     ):
         def factory(m: int):
             eng = make(engine, m)
@@ -86,7 +87,12 @@ class FailureDomain:
             return eng
 
         self._eng = MementoWrapper(
-            factory, n, max_chain=max_chain, chain_bits=chain_bits, resolve=resolve
+            factory,
+            n,
+            max_chain=max_chain,
+            chain_bits=chain_bits,
+            resolve=resolve,
+            allow_empty=allow_empty,
         )
 
     @property

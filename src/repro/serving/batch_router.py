@@ -54,6 +54,7 @@ scalar router is the oracle for the batched one.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -67,6 +68,7 @@ from repro.core.registry import make_bulk
 from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels.fused import LANES
+from repro.serving.lifecycle.errors import FleetUnavailableError
 from repro.serving.router import SessionRouter, hash_session_ids
 
 #: "this keyword was not passed" sentinel — None is meaningful for several
@@ -177,6 +179,9 @@ class BatchRouter:
         # bound) — accepted and validated for API stability with the
         # chain-mode library flavour, forwarded only so the control plane
         # would stay bit-exact if flipped to chain mode.
+        # allow_empty: an all-failed fleet is a queryable state the route
+        # entry points answer with FleetUnavailableError — the failure event
+        # itself is never refused (DESIGN.md §12)
         self.scalar = SessionRouter(
             n_replicas,
             engine=self._bulk.scalar_engine,
@@ -184,6 +189,7 @@ class BatchRouter:
             omega=spec.omega,
             max_chain=max_chain,
             resolve="table",
+            allow_empty=True,
         )
         self.max_chain = max_chain
         self.fused = fused
@@ -204,6 +210,13 @@ class BatchRouter:
         self._fleet_host = FleetState.pack(self.domain, spec.capacity)
         self._fleet_dev: FleetState | None = None
         self._n_dev: jax.Array | None = None
+        #: routing epoch: one tick per fleet event — callers (and the
+        #: lifecycle layer) use it to detect placements staled by later
+        #: events; the journal's epochs match it one-to-one
+        self._epoch = 0
+        # event-storm coalescing state (see ``coalesced_events``)
+        self._coalescing = False
+        self._state_dirty = False
         self._put_state()
 
     # -- spec facade (the pre-spec attribute names, kept as properties) -----
@@ -295,6 +308,11 @@ class BatchRouter:
         never per batch, and ONE ``device_put`` for the lot (a few KiB; the
         per-call fixed cost dominates at these sizes, so batching the
         transfers keeps fleet events well under a millisecond)."""
+        if self._coalescing:
+            # inside coalesced_events: defer — the whole event burst lands
+            # as ONE wholesale resync + upload on exit
+            self._state_dirty = True
+            return
         if self.fused:
             self._fleet_dev = self._device_put(self._fleet_host)
         else:
@@ -306,6 +324,38 @@ class BatchRouter:
         """Incremental fleet-event update: flip one mask bit, re-pin."""
         self._fleet_host.set_removed(replica, removed)
         self._put_state()  # the permutation swapped O(1) entries
+
+    # -- event-storm coalescing ---------------------------------------------
+    @contextlib.contextmanager
+    def coalesced_events(self):
+        """Defer device-state refresh across a burst of fleet events.
+
+        Inside the context every fail/recover/scale event still mutates the
+        host control plane immediately (the scalar oracle, the journal
+        epochs and ``routing_epoch`` all stay exact per event); only the
+        device-twin refresh is deferred.  On exit the final state lands in
+        ONE wholesale resync + upload — bit-exact with per-event
+        application, because the device operands are a pure function of the
+        final control-plane state.  Re-entrant: the outermost context owns
+        the flush.  ``route_keys``/``route_ids`` flush defensively, so a
+        dispatch can never read a stale device twin.
+        """
+        if self._coalescing:
+            yield
+            return
+        self._coalescing = True
+        try:
+            yield
+        finally:
+            self._coalescing = False
+            if self._state_dirty:
+                self._flush_events()
+
+    def _flush_events(self) -> None:
+        """Land every deferred event in one resync + one device upload."""
+        self._state_dirty = False
+        self._fleet_host.resync(self.domain)
+        self._upload_state()
 
     # -- block-size resolution ----------------------------------------------
     def _resolve_block_rows(self, rows: int) -> int:
@@ -351,6 +401,14 @@ class BatchRouter:
 
     # -- routing ------------------------------------------------------------
     session_key = staticmethod(SessionRouter.session_key)
+
+    def _check_routable(self) -> None:
+        """Route-entry guard: typed error on an all-failed fleet, and land
+        any coalesced events the dispatch would otherwise miss."""
+        if self.scalar.alive == 0:
+            raise FleetUnavailableError(epoch=self._epoch)
+        if self._state_dirty and not self._coalescing:
+            self._flush_events()
 
     def _coerce_keys(self, keys) -> jax.Array | np.ndarray:
         """Any int keys -> u32, truncating exactly like the scalar oracle.
@@ -427,6 +485,7 @@ class BatchRouter:
         movement bookkeeping; use ``route_batch`` for session-level
         observability, ``route_keys_np`` for numpy.
         """
+        self._check_routable()
         keys_u32 = self._coerce_keys(keys)
         size = int(np.size(keys_u32))
         if size == 0:
@@ -463,6 +522,7 @@ class BatchRouter:
                 "route_ids is single-host only; under a mesh pre-hash with "
                 "hash_session_ids and call route_keys"
             )
+        self._check_routable()
         ids = np.ascontiguousarray(session_ids, dtype=np.uint64)
         if ids.size == 0:
             return jnp.zeros(ids.shape, dtype=jnp.int32)
@@ -511,16 +571,19 @@ class BatchRouter:
                 "construct BatchRouter with a larger capacity"
             )
         r = self.scalar.scale_up()
+        self._epoch += 1
         self._put_state()
         return r
 
     def scale_down(self) -> int:
         r = self.scalar.scale_down()
+        self._epoch += 1
         self._resync_device_state()
         return r
 
     def fail(self, replica: int) -> None:
         self.scalar.fail(replica)
+        self._epoch += 1
         if replica in self.domain.removed:
             self._set_removed_bit(replica, True)
         else:
@@ -530,8 +593,14 @@ class BatchRouter:
 
     def recover(self, replica: int) -> None:
         self.scalar.recover(replica)
+        self._epoch += 1
         self._set_removed_bit(replica, False)
 
     @property
     def alive(self) -> int:
         return self.scalar.alive
+
+    @property
+    def routing_epoch(self) -> int:
+        """Fleet-event counter: the epoch the next dispatch routes under."""
+        return self._epoch

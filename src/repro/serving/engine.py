@@ -91,14 +91,37 @@ class ServingTier:
                 shard_axis="data" if shard_axis is None else shard_axis,
             )
         self.replicas = [Replica(cfg, params, max_len) for _ in range(n_replicas)]
+        #: optional lifecycle robustness layer (``attach_lifecycle``)
+        self.lifecycle = None
+
+    def attach_lifecycle(self, config=None, clock=None):
+        """Wrap the router in a ``LifecycleManager`` (DESIGN.md §12).
+
+        Heartbeats then flow through ``tier.heartbeat(slot)``, and every
+        ``serve`` first ticks the failure detector — expirations land as
+        ONE coalesced device-state update before the batch is routed.
+        """
+        from repro.serving.lifecycle import LifecycleManager
+
+        self.lifecycle = LifecycleManager(self.router, config=config, clock=clock)
+        return self.lifecycle
+
+    def heartbeat(self, replica: int) -> None:
+        if self.lifecycle is None:
+            raise RuntimeError("call attach_lifecycle() before heartbeat()")
+        self.lifecycle.heartbeat(replica)
 
     def serve(self, requests: list[Request]) -> dict[str, np.ndarray]:
         """Route the whole batch in one device pass, group, serve aligned.
 
         Ingest is batched end to end (DESIGN.md §9): session ids are hashed
         vectorised, routed in one fused dispatch, and movement-tracked in
-        bulk — no per-request Python on the routing path.
+        bulk — no per-request Python on the routing path.  With a lifecycle
+        attached, detector expirations are applied (coalesced) before
+        routing; an all-failed fleet raises ``FleetUnavailableError``.
         """
+        if self.lifecycle is not None:
+            self.lifecycle.tick()
         if not requests:
             return {}  # zero-row batches have nothing to route or serve
         replicas = self.router.route_batch([r.session_id for r in requests])

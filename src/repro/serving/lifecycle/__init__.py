@@ -1,0 +1,66 @@
+"""Fleet lifecycle hardening: journal, failure detection, degradation.
+
+The robustness layer around the constant-time routing kernel (DESIGN.md
+§12): epoch-journaled membership with bit-exact crash replay, heartbeat
+failure detection with hysteresis/quarantine, event-storm coalescing and
+typed degraded/unavailable routing modes.
+"""
+from repro.serving.lifecycle.detector import (
+    ALIVE,
+    QUARANTINED,
+    REMOVED,
+    SUSPECT,
+    FailureDetector,
+    HeartbeatConfig,
+    ManualClock,
+    MonotonicClock,
+)
+from repro.serving.lifecycle.errors import (
+    FleetDegradedError,
+    FleetUnavailableError,
+    LifecycleError,
+)
+from repro.serving.lifecycle.journal import (
+    EVENT_KINDS,
+    JournalSnapshot,
+    MembershipEvent,
+    MembershipJournal,
+    apply_event,
+    replay,
+    restore,
+)
+from repro.serving.lifecycle.manager import (
+    MODE_DEGRADED,
+    MODE_NORMAL,
+    MODE_UNAVAILABLE,
+    LifecycleConfig,
+    LifecycleManager,
+    RoutedBatch,
+)
+
+__all__ = [
+    "ALIVE",
+    "SUSPECT",
+    "REMOVED",
+    "QUARANTINED",
+    "FailureDetector",
+    "HeartbeatConfig",
+    "ManualClock",
+    "MonotonicClock",
+    "LifecycleError",
+    "FleetUnavailableError",
+    "FleetDegradedError",
+    "EVENT_KINDS",
+    "MembershipEvent",
+    "MembershipJournal",
+    "JournalSnapshot",
+    "apply_event",
+    "replay",
+    "restore",
+    "LifecycleConfig",
+    "LifecycleManager",
+    "RoutedBatch",
+    "MODE_NORMAL",
+    "MODE_DEGRADED",
+    "MODE_UNAVAILABLE",
+]

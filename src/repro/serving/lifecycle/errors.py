@@ -1,0 +1,50 @@
+"""Typed lifecycle errors — the degradation layer's contract with callers.
+
+``BatchRouter.route_*`` / ``SessionRouter.route`` / ``ServingTier.serve``
+raise these instead of tripping over an internal ``ValueError`` deep in the
+scalar oracle: an all-failed fleet is a *defined* state with a *typed*
+answer, not undefined behavior (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+
+class LifecycleError(RuntimeError):
+    """Base class for fleet-lifecycle errors."""
+
+
+class FleetUnavailableError(LifecycleError):
+    """Every replica is failed: there is no alive slot to route to.
+
+    Raised by the route entry points *before* any device dispatch (the
+    device kernels never see ``n_alive == 0``) and by the degradation layer
+    when a caller routes through an unavailable fleet.  Recover or scale up
+    to clear it.
+    """
+
+    def __init__(self, message: str | None = None, *, epoch: int | None = None):
+        if message is None:
+            message = "fleet unavailable: no alive replicas to route to"
+            if epoch is not None:
+                message += f" (epoch {epoch})"
+        super().__init__(message)
+        #: routing epoch at which the fleet was observed unavailable (None
+        #: when the raising layer does not track epochs)
+        self.epoch = epoch
+
+
+class FleetDegradedError(LifecycleError):
+    """``n_alive`` fell below the configured floor and the lifecycle policy
+    is strict: routing is refused until capacity recovers.
+
+    Only raised when ``LifecycleConfig.strict_floor`` is set; the default
+    policy keeps routing (mode ``"degraded"``) and lets the caller decide.
+    """
+
+    def __init__(self, n_alive: int, floor: int, *, epoch: int | None = None):
+        super().__init__(
+            f"fleet degraded: {n_alive} alive replica(s) below the "
+            f"min_alive floor of {floor}"
+        )
+        self.n_alive = n_alive
+        self.floor = floor
+        self.epoch = epoch

@@ -1,0 +1,270 @@
+"""LifecycleManager: journal + detector + degradation around a BatchRouter.
+
+The robustness layer of the serving tier (DESIGN.md §12).  Composition, not
+inheritance: the manager *wraps* a ``BatchRouter`` (anything with the fleet
+-event + route surface works) and adds
+
+* **journaling** — every membership event that flows through the manager is
+  epoch-stamped into a ``MembershipJournal``; ``snapshot()`` +
+  ``verify_replay()`` prove the live control plane and the device operands
+  are reproducible from the log (crash recovery = restore + tail replay);
+* **failure detection** — replica heartbeats feed a deadline
+  ``FailureDetector``; ``tick()`` turns deadline expiries into coalesced
+  fail/recover events before the next dispatch;
+* **coalescing** — a storm of N events becomes ONE device-state upload
+  (``BatchRouter.coalesced_events``), with the final routing bit-exact
+  against per-event application (the device operands are a pure function of
+  the final control-plane state);
+* **degradation** — typed route-time answers: ``FleetUnavailableError`` at
+  ``n_alive == 0`` always; below ``min_alive_floor`` either a
+  ``FleetDegradedError`` (``strict_floor=True``) or a routed batch marked
+  ``mode="degraded"``;
+* **epochs** — every routed batch carries the routing epoch it was computed
+  under, so callers can detect placements staled by later events.
+
+Everything here is host-side control plane: the device hot path is the same
+single fused dispatch ``BatchRouter`` always ran (the constant-time
+certifier pins this — ``repro.analysis`` certifies the lifecycle-wrapped
+route entry too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+from repro.serving.lifecycle.detector import (
+    FailureDetector,
+    HeartbeatConfig,
+    MonotonicClock,
+)
+from repro.serving.lifecycle.errors import (
+    FleetDegradedError,
+    FleetUnavailableError,
+)
+from repro.serving.lifecycle.journal import (
+    JournalSnapshot,
+    MembershipJournal,
+    replay,
+    restore,
+)
+
+#: fleet modes, ordered by health
+MODE_NORMAL = "normal"
+MODE_DEGRADED = "degraded"
+MODE_UNAVAILABLE = "unavailable"
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleConfig:
+    #: below this many alive replicas the fleet counts as degraded
+    min_alive_floor: int = 1
+    #: True: routing below the floor raises FleetDegradedError; False (the
+    #: default): routing proceeds, the result is marked mode="degraded"
+    strict_floor: bool = False
+    heartbeat: HeartbeatConfig = dataclasses.field(default_factory=HeartbeatConfig)
+
+    def __post_init__(self):
+        if self.min_alive_floor < 1:
+            raise ValueError(
+                f"min_alive_floor must be >= 1, got {self.min_alive_floor}"
+            )
+
+
+class RoutedBatch(NamedTuple):
+    """A routed batch + the epoch/mode it was computed under."""
+
+    replicas: object  # jax.Array / np.ndarray of int32 replica ids
+    epoch: int
+    mode: str
+
+
+class LifecycleManager:
+    def __init__(self, router, config: LifecycleConfig | None = None, clock=None):
+        self.router = router
+        self.config = config or LifecycleConfig()
+        self.clock = clock or MonotonicClock()
+        self.journal = MembershipJournal(router.domain.total_count)
+        self.detector = FailureDetector(
+            (s for s in range(router.domain.total_count)
+             if s not in router.domain.removed),
+            self.config.heartbeat,
+            self.clock,
+        )
+        # journal epochs continue from the router's own event counter so the
+        # per-batch epoch is consistent whether events arrive via the
+        # manager or (pre-attach) via the router directly
+        if router.routing_epoch != 0:
+            raise ValueError(
+                "attach the LifecycleManager before mutating the fleet: the "
+                f"router has already seen {router.routing_epoch} event(s) "
+                "the journal cannot replay"
+            )
+
+    # -- health --------------------------------------------------------------
+    @property
+    def n_alive(self) -> int:
+        return self.router.domain.alive_count
+
+    @property
+    def mode(self) -> str:
+        n = self.n_alive
+        if n == 0:
+            return MODE_UNAVAILABLE
+        if n < self.config.min_alive_floor:
+            return MODE_DEGRADED
+        return MODE_NORMAL
+
+    @property
+    def epoch(self) -> int:
+        return self.journal.epoch
+
+    # -- heartbeat plane -----------------------------------------------------
+    def heartbeat(self, slot: int) -> None:
+        self.detector.heartbeat(slot)
+
+    def tick(self) -> list:
+        """Poll the detector; apply any expiries as ONE coalesced update.
+
+        Call once per dispatch (the serving tier does) — a whole failure
+        storm between two batches lands as a single device-state upload.
+        """
+        return self.apply(self.detector.poll())
+
+    # -- membership events (all journaled) -----------------------------------
+    def apply(self, transitions) -> list:
+        """Apply ``("fail"|"recover", slot)`` pairs under one coalesced
+        device update; journal each.  Returns the recorded events."""
+        recorded = []
+        if not transitions:
+            return recorded
+        with self.router.coalesced_events():
+            for kind, slot in transitions:
+                if kind == "fail":
+                    self.router.fail(slot)
+                elif kind == "recover":
+                    self.router.recover(slot)
+                else:
+                    raise ValueError(f"unknown transition kind {kind!r}")
+                recorded.append(self.journal.record(kind, slot))
+        self._forget_retired()
+        return recorded
+
+    def _forget_retired(self) -> None:
+        """Drop detector tracks for slots the control plane retired (failing
+        the top slot is a LIFO retirement that may GC tombstones too)."""
+        total = self.router.domain.total_count
+        for slot in self.detector.slots:
+            if slot >= total:
+                self.detector.forget(slot)
+
+    def fail(self, slot: int) -> None:
+        """Operator-initiated failure (journaled; detector aligned)."""
+        self.router.fail(slot)
+        self.journal.record("fail", slot)
+        if slot in self.router.domain.removed:
+            self.detector.mark_removed(slot)
+        self._forget_retired()
+
+    def recover(self, slot: int) -> None:
+        """Operator-initiated recovery (journaled; detector re-admits)."""
+        self.router.recover(slot)
+        self.journal.record("recover", slot)
+        self.detector.register(slot)
+
+    def scale_up(self) -> int:
+        new = self.router.scale_up()
+        self.journal.record("scale_up", new)
+        self.detector.register(new)
+        return new
+
+    def scale_down(self) -> int:
+        gone = self.router.scale_down()
+        self.journal.record("scale_down", gone)
+        # the retirement may have garbage-collected tombstones off the end
+        for slot in self.detector.slots:
+            if slot >= self.router.domain.total_count:
+                self.detector.forget(slot)
+        return gone
+
+    # -- routing (degradation-guarded, epoch-stamped) ------------------------
+    def _guard(self) -> str:
+        mode = self.mode
+        if mode == MODE_UNAVAILABLE:
+            raise FleetUnavailableError(epoch=self.epoch)
+        if mode == MODE_DEGRADED and self.config.strict_floor:
+            raise FleetDegradedError(
+                self.n_alive, self.config.min_alive_floor, epoch=self.epoch
+            )
+        return mode
+
+    def route_keys(self, keys) -> RoutedBatch:
+        mode = self._guard()
+        return RoutedBatch(self.router.route_keys(keys), self.epoch, mode)
+
+    def route_keys_np(self, keys) -> RoutedBatch:
+        mode = self._guard()
+        return RoutedBatch(self.router.route_keys_np(keys), self.epoch, mode)
+
+    def route_batch(self, session_ids) -> RoutedBatch:
+        mode = self._guard()
+        return RoutedBatch(self.router.route_batch(session_ids), self.epoch, mode)
+
+    # -- crash recovery ------------------------------------------------------
+    def _domain_factory(self, n: int):
+        """Build a domain EXACTLY like the router's control plane builds
+        its oracle — same engine flavour, omega and resolution."""
+        from repro.placement.elastic import FailureDomain
+
+        return FailureDomain(
+            n,
+            engine=self.router._bulk.scalar_engine,
+            chain_bits=32,
+            omega=self.router.spec.omega,
+            max_chain=self.router.max_chain,
+            resolve="table",
+            allow_empty=True,
+        )
+
+    def snapshot(self) -> JournalSnapshot:
+        return JournalSnapshot.capture(self.epoch, self.router.domain)
+
+    def rebuild_domain(self, snapshot: JournalSnapshot | None = None):
+        """Rebuild the control plane from the log (and optional snapshot)."""
+        if snapshot is None:
+            return replay(self.journal, self._domain_factory)
+        return restore(
+            snapshot, self._domain_factory, self.journal.events(since=snapshot.epoch)
+        )
+
+    def verify_replay(self, snapshot: JournalSnapshot | None = None) -> None:
+        """Assert replay(journal) == live state, bit-exactly — the scalar
+        control plane AND the packed device operands.  Raises on mismatch."""
+        import numpy as np
+
+        from repro.core.bulk import FleetState
+
+        rebuilt = self.rebuild_domain(snapshot)
+        live = self.router.domain
+        if rebuilt.total_count != live.total_count:
+            raise AssertionError(
+                f"replay n_total {rebuilt.total_count} != live {live.total_count}"
+            )
+        if rebuilt.removed != live.removed:
+            raise AssertionError(
+                f"replay removed {sorted(rebuilt.removed)} != live "
+                f"{sorted(live.removed)}"
+            )
+        rt_new, rt_live = rebuilt.replacement_table, live.replacement_table
+        if (
+            rt_new.slots != rt_live.slots
+            or rt_new.pos != rt_live.pos
+            or rt_new.n_alive != rt_live.n_alive
+        ):
+            raise AssertionError("replayed ReplacementTable differs from live")
+        packed = FleetState.pack(rebuilt, self.router.spec.capacity)
+        host = self.router._fleet_host
+        for leaf in ("packed", "table", "state"):
+            if not np.array_equal(getattr(packed, leaf), getattr(host, leaf)):
+                raise AssertionError(
+                    f"replayed device operand {leaf!r} differs from live"
+                )

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import bits
 from repro.placement.elastic import FailureDomain
+from repro.serving.lifecycle.errors import FleetUnavailableError
 from repro.serving.session_store import SessionStore
 
 
@@ -156,6 +157,7 @@ class SessionRouter:
         omega: int | None = None,
         max_chain: int = 4096,
         resolve: str = "chain",
+        allow_empty: bool = False,
     ):
         self.domain = FailureDomain(
             n_replicas,
@@ -164,6 +166,7 @@ class SessionRouter:
             omega=omega,
             max_chain=max_chain,
             resolve=resolve,
+            allow_empty=allow_empty,
         )
         self.stats = RoutingStats()
         #: session key -> last replica (observability only): bulk
@@ -180,6 +183,8 @@ class SessionRouter:
         return bits.mix64(session_id)
 
     def route(self, session_id: str | int) -> int:
+        if self.domain.alive_count == 0:
+            raise FleetUnavailableError()
         key = self.session_key(session_id)
         replica = self.domain.locate(key)
         self.stats.lookups += 1

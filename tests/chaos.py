@@ -1,0 +1,419 @@
+"""Seeded chaos-scenario library for fleet-lifecycle robustness.
+
+Shared by the invariant test suite (``tests/test_chaos_invariants.py``) and
+the chaos benchmark (``benchmarks/bench_chaos.py``).  A **scenario** is a
+seeded, fully deterministic storyline of fleet trouble driven against a
+``LifecycleManager``-wrapped ``BatchRouter``:
+
+* ``storm``          — correlated mass failures + mass recovery, coalesced;
+* ``flap``           — a replica blinking through the heartbeat detector;
+* ``cascade``        — one-at-a-time failures down to (and through) the
+                       last alive replica, then staged recovery;
+* ``crash_recover``  — random membership churn with mid-stream snapshots;
+                       the "process" then crashes and is rebuilt from the
+                       JSONL journal (genesis AND snapshot+tail);
+* ``mixed``          — everything above interleaved, plus scale up/down.
+
+After (almost) every step the runner routes a fixed probe-key batch through
+the real fused device datapath and checks the paper-level invariants:
+
+1. **alive-only** — no probe ever routes to a removed replica;
+2. **minimal disruption** — after a single fail/recover of slot ``b``, a
+   key that sat undiverted on its base bucket (and whose base bucket is not
+   ``b``) must not move (the paper's minimal-disruption theorem, extended
+   to the replacement-table divert: only diverted keys and ``b``'s keys may
+   move); after scale-up of an un-tombstoned fleet, movers land ONLY on the
+   new replica (monotonicity);
+3. **typed degradation** — routing raises ``FleetUnavailableError`` exactly
+   when ``n_alive == 0``;
+4. **epoch stamping** — every routed batch carries the journal epoch;
+5. **replay parity** — at scripted crash points and at scenario end,
+   ``replay(journal) == live state`` bit-exactly (scalar control plane AND
+   packed device operands), via ``LifecycleManager.verify_replay``.
+
+Violations are collected (not raised) so the benchmark can count them; the
+pytest suite asserts the list is empty.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.placement.elastic import FailureDomain
+from repro.serving.batch_router import BatchRouter
+from repro.serving.lifecycle import (
+    FleetUnavailableError,
+    HeartbeatConfig,
+    LifecycleConfig,
+    LifecycleManager,
+    ManualClock,
+    MembershipJournal,
+    replay,
+)
+
+#: scenario storylines (see module docstring)
+KINDS = ("storm", "flap", "cascade", "crash_recover", "mixed")
+
+#: fixed probe keys routed after every step — small enough to keep 1000s of
+#: scenarios fast, large enough that every replica of a <=32-slot fleet owns
+#: many keys
+N_PROBE = 256
+PROBE_KEYS = np.random.default_rng(0x5EED).integers(
+    0, 1 << 32, size=N_PROBE, dtype=np.uint32
+)
+
+#: (engine, n_total) -> base-engine bucket per probe key (no tombstones):
+#: the "undiverted home" used by the minimal-disruption check
+_BASE_CACHE: dict[tuple[str, int], np.ndarray] = {}
+
+
+def base_buckets(scalar_engine: str, n_total: int) -> np.ndarray:
+    out = _BASE_CACHE.get((scalar_engine, n_total))
+    if out is None:
+        dom = FailureDomain(
+            n_total, engine=scalar_engine, chain_bits=32, resolve="table"
+        )
+        out = np.fromiter(
+            (dom.locate(int(k)) for k in PROBE_KEYS), dtype=np.int64, count=N_PROBE
+        )
+        _BASE_CACHE[(scalar_engine, n_total)] = out
+    return out
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    kind: str
+    engine: str
+    seed: int
+    events: int = 0
+    route_attempts: int = 0
+    route_unavailable: int = 0
+    replay_checks: int = 0
+    #: ManualClock seconds from each detector "fail" emission to the
+    #: matching "recover" emission (detector-driven scenarios only)
+    recovery_latencies: list = dataclasses.field(default_factory=list)
+    violations: list = dataclasses.field(default_factory=list)
+
+    @property
+    def availability(self) -> float:
+        if self.route_attempts == 0:
+            return 1.0
+        return 1.0 - self.route_unavailable / self.route_attempts
+
+
+class _Runner:
+    """Drives one manager through a scenario, checking invariants per step."""
+
+    def __init__(self, kind: str, engine: str, seed: int, n_initial: int):
+        self.rng = np.random.default_rng(seed)
+        self.clock = ManualClock()
+        self.router = BatchRouter(n_initial, engine=engine)
+        self.mgr = LifecycleManager(
+            self.router, LifecycleConfig(min_alive_floor=1), clock=self.clock
+        )
+        self.scalar_engine = self.router._bulk.scalar_engine
+        self.res = ScenarioResult(kind=kind, engine=engine, seed=seed)
+        self.prev_routes: np.ndarray | None = None
+        self.probe()
+
+    # -- state helpers ------------------------------------------------------
+    @property
+    def total(self) -> int:
+        return self.router.domain.total_count
+
+    @property
+    def removed(self) -> frozenset:
+        return self.router.domain.removed
+
+    @property
+    def alive_slots(self) -> list:
+        rm = self.removed
+        return [s for s in range(self.total) if s not in rm]
+
+    def _flag(self, msg: str) -> None:
+        self.res.violations.append(
+            f"[{self.res.kind}/{self.res.engine}/seed={self.res.seed}] {msg}"
+        )
+
+    # -- probing + invariants ------------------------------------------------
+    def probe(self, event=None) -> None:
+        """Route the probe batch; check invariants vs the previous probe.
+
+        ``event`` is ``(kind, slot)`` when exactly ONE membership event
+        happened since the last probe (enables the minimal-disruption
+        check); ``None`` means zero-or-many events (alive-only still holds).
+        """
+        self.res.route_attempts += 1
+        n_alive = self.router.domain.alive_count
+        try:
+            batch = self.mgr.route_keys_np(PROBE_KEYS)
+        except FleetUnavailableError:
+            self.res.route_unavailable += 1
+            if n_alive != 0:
+                self._flag(f"FleetUnavailableError with n_alive={n_alive}")
+            self.prev_routes = None
+            return
+        if n_alive == 0:
+            self._flag("route succeeded with n_alive == 0")
+            return
+        routes = np.asarray(batch.replicas, dtype=np.int64)
+        if batch.epoch != self.mgr.epoch:
+            self._flag(f"batch epoch {batch.epoch} != journal epoch {self.mgr.epoch}")
+        dead = set(routes.tolist()) - set(self.alive_slots)
+        if dead:
+            self._flag(f"routed to removed replica(s) {sorted(dead)}")
+        if event is not None and self.prev_routes is not None:
+            self._check_minimal_disruption(event, self.prev_routes, routes)
+        self.prev_routes = routes
+
+    def _check_minimal_disruption(self, event, prev, now) -> None:
+        kind, slot = event
+        moved = prev != now
+        if kind in ("fail", "recover"):
+            base = base_buckets(self.scalar_engine, self.total)
+            # keys sitting undiverted on their (still-alive) base bucket
+            # are untouchable by a single fail/recover of another slot
+            pinned = (prev == base) & (base != slot)
+            bad = moved & pinned
+            if bad.any():
+                i = int(np.flatnonzero(bad)[0])
+                self._flag(
+                    f"{kind}({slot}) moved pinned key {int(PROBE_KEYS[i])}: "
+                    f"{int(prev[i])} -> {int(now[i])} (base {int(base[i])})"
+                )
+        elif kind == "scale_up" and not self.removed:
+            # un-tombstoned fleet: movers land only on the new slot
+            bad = moved & (now != slot)
+            if bad.any():
+                i = int(np.flatnonzero(bad)[0])
+                self._flag(
+                    f"scale_up({slot}) moved key {int(PROBE_KEYS[i])} to "
+                    f"{int(now[i])} instead of the new replica"
+                )
+
+    def check_replay(self) -> None:
+        self.res.replay_checks += 1
+        try:
+            self.mgr.verify_replay()
+            self.mgr.verify_replay(self.mgr.snapshot())
+        except AssertionError as e:
+            self._flag(f"replay parity: {e}")
+
+    def crash_and_rebuild(self, snapshot, tail_from: int) -> None:
+        """Simulate a crash: rebuild from serialized journal text only."""
+        self.res.replay_checks += 1
+        try:
+            text = self.mgr.journal.to_jsonl()
+            journal = MembershipJournal.from_jsonl(text)
+            if journal.epoch != self.mgr.epoch:
+                raise AssertionError(
+                    f"JSONL round-trip lost epochs ({journal.epoch} != "
+                    f"{self.mgr.epoch})"
+                )
+            rebuilt = replay(journal, self.mgr._domain_factory)
+            live = self.router.domain
+            if (
+                rebuilt.total_count != live.total_count
+                or rebuilt.removed != live.removed
+                or rebuilt.replacement_table.slots
+                != live.replacement_table.slots
+            ):
+                raise AssertionError("genesis replay of JSONL != live state")
+            self.mgr.verify_replay(snapshot)  # snapshot + tail path
+        except (AssertionError, ValueError) as e:
+            self._flag(f"crash recovery (tail from epoch {tail_from}): {e}")
+
+    # -- event vocabulary ----------------------------------------------------
+    def fail_one(self, slot: int) -> None:
+        before = self.total
+        self.mgr.fail(slot)
+        self.res.events += 1
+        # failing the top slot is a LIFO retirement that shrinks n_total —
+        # base buckets are recomputed under the new size, so the
+        # single-event pinned-key check does not apply (alive-only does)
+        self.probe(("fail", slot) if self.total == before else None)
+
+    def recover_one(self, slot: int) -> None:
+        self.mgr.recover(slot)
+        self.res.events += 1
+        self.probe(("recover", slot))
+
+    def storm(self, transitions) -> None:
+        self.mgr.apply(transitions)
+        self.res.events += len(transitions)
+        self.probe()  # multi-event: alive-only + epoch checks
+
+    def maybe_scale_up(self) -> None:
+        if self.total >= self.router.spec.capacity:
+            return
+        new = self.mgr.scale_up()
+        self.res.events += 1
+        self.probe(("scale_up", new))
+
+    def maybe_scale_down(self) -> None:
+        # valid when >1 alive, or exactly one alive sitting on the top slot
+        if self.router.domain.alive_count > 1 or (
+            self.router.domain.alive_count == 1
+            and (self.total - 1) not in self.removed
+        ):
+            self.mgr.scale_down()
+            self.res.events += 1
+            self.probe()
+
+
+# -- scenario storylines ------------------------------------------------------
+
+def _run_storm(r: _Runner) -> None:
+    for _round in range(3):
+        alive = r.alive_slots
+        if len(alive) < 2:
+            break
+        k = int(r.rng.integers(1, len(alive)))  # may take out ALL but keep >=... or all
+        victims = [int(s) for s in r.rng.choice(alive, size=k, replace=False)]
+        r.storm([("fail", s) for s in victims])
+        back = [s for s in victims if s in r.removed]
+        r.storm([("recover", s) for s in r.rng.permutation(back).tolist()])
+    r.check_replay()
+
+
+def _run_flap(r: _Runner) -> None:
+    cfg = r.mgr.config.heartbeat
+    slots = r.mgr.detector.slots
+    # never the top slot: a deadline-fail there is a LIFO *retirement*
+    # (slot space shrinks, the id ceases to exist) — a flapping replica
+    # that can come back must hold a non-top slot
+    victim = int(r.rng.choice(slots[:-1])) if len(slots) > 1 else int(slots[0])
+    fail_at: float | None = None
+    for _ in range(200):
+        dt = float(r.rng.uniform(0.4, cfg.heartbeat_interval * 1.4))
+        r.clock.advance(dt)
+        for s in slots:
+            if s == victim:
+                # the victim blinks: beats arrive only ~45% of the time
+                if r.rng.random() < 0.45:
+                    r.mgr.heartbeat(s)
+            else:
+                r.mgr.heartbeat(s)
+        events = r.mgr.tick()
+        for ev in events:
+            r.res.events += 1
+            if ev.slot != victim:
+                r._flag(f"detector fired for healthy replica {ev.slot}")
+            if ev.kind == "fail":
+                if fail_at is not None:
+                    r._flag("second 'fail' without intervening 'recover'")
+                fail_at = r.clock.now()
+            elif ev.kind == "recover":
+                if fail_at is None:
+                    r._flag("'recover' without preceding 'fail'")
+                else:
+                    r.res.recovery_latencies.append(r.clock.now() - fail_at)
+                    fail_at = None
+        if events:
+            r.probe(
+                (events[0].kind, events[0].slot) if len(events) == 1 else None
+            )
+    # let the victim stabilise and re-admit (bounded by flap backoff cap)
+    deadline = r.clock.now() + cfg.max_readmit_after + 4 * cfg.suspect_after
+    while fail_at is not None and r.clock.now() < deadline:
+        r.clock.advance(cfg.heartbeat_interval * 0.9)
+        for s in slots:
+            r.mgr.heartbeat(s)
+        for ev in r.mgr.tick():
+            r.res.events += 1
+            if ev.kind == "recover" and ev.slot == victim:
+                r.res.recovery_latencies.append(r.clock.now() - fail_at)
+                fail_at = None
+    if fail_at is not None:
+        r._flag("flapping replica never re-admitted after stable beats")
+    r.probe()
+    r.check_replay()
+
+
+def _run_cascade(r: _Runner) -> None:
+    # fail one at a time all the way to an empty fleet...
+    order = r.rng.permutation(r.alive_slots).tolist()
+    for s in order:
+        if s in r.removed or s >= r.total:
+            continue  # a LIFO retirement garbage-collected it already
+        r.fail_one(int(s))
+    if r.router.domain.alive_count == 0:
+        # ...and prove the outage is typed at the router layer too
+        try:
+            r.router.route_keys_np(PROBE_KEYS[:8])
+            r._flag("raw router routed with n_alive == 0")
+        except FleetUnavailableError:
+            pass
+    # ...then staged recovery of everything that still has a slot
+    for s in sorted(r.removed):
+        r.recover_one(int(s))
+    if r.router.domain.alive_count != r.total:
+        r._flag("cascade recovery left tombstones behind")
+    r.check_replay()
+
+
+def _run_crash_recover(r: _Runner) -> None:
+    crash_points = set(r.rng.integers(2, 30, size=2).tolist())
+    snap = None
+    snap_epoch = 0
+    for step in range(30):
+        alive = r.alive_slots
+        tomb = sorted(r.removed)
+        roll = r.rng.random()
+        if tomb and roll < 0.4:
+            r.recover_one(int(r.rng.choice(tomb)))
+        elif alive and roll < 0.9:
+            r.fail_one(int(r.rng.choice(alive)))
+        else:
+            r.maybe_scale_up()
+        if step in crash_points:
+            snap = r.mgr.snapshot()
+            snap_epoch = snap.epoch
+    r.crash_and_rebuild(snap, snap_epoch)
+    r.check_replay()
+
+
+def _run_mixed(r: _Runner) -> None:
+    for step in range(24):
+        alive = r.alive_slots
+        tomb = sorted(r.removed)
+        roll = r.rng.random()
+        if roll < 0.30 and alive:
+            r.fail_one(int(r.rng.choice(alive)))
+        elif roll < 0.55 and tomb:
+            r.recover_one(int(r.rng.choice(tomb)))
+        elif roll < 0.70 and len(alive) > 2:
+            k = int(r.rng.integers(2, len(alive)))
+            victims = [int(s) for s in r.rng.choice(alive, size=k, replace=False)]
+            r.storm([("fail", s) for s in victims])
+            back = [s for s in victims if s in r.removed]
+            if back:
+                r.storm([("recover", s) for s in back])
+        elif roll < 0.85:
+            r.maybe_scale_up()
+        else:
+            r.maybe_scale_down()
+        if step % 8 == 7:
+            r.check_replay()
+    r.check_replay()
+
+
+_STORYLINES = {
+    "storm": _run_storm,
+    "flap": _run_flap,
+    "cascade": _run_cascade,
+    "crash_recover": _run_crash_recover,
+    "mixed": _run_mixed,
+}
+
+
+def run_scenario(kind: str, engine: str, seed: int) -> ScenarioResult:
+    """Run one seeded scenario; returns the result (violations collected)."""
+    if kind not in _STORYLINES:
+        raise ValueError(f"unknown scenario kind {kind!r}; expected {KINDS}")
+    rng = np.random.default_rng(seed)
+    n_initial = int(rng.integers(4, 17))
+    r = _Runner(kind, engine, seed, n_initial)
+    _STORYLINES[kind](r)
+    return r.res

@@ -1,0 +1,58 @@
+"""Chaos invariants: seeded scenario grid over both engines, zero violations.
+
+The scenario library is ``tests/chaos.py`` (also driven at ~1000-scenario
+scale by ``benchmarks/bench_chaos.py``); this suite runs a deterministic
+grid small enough for tier-1 but covering every scenario kind x engine.
+"""
+import numpy as np
+import pytest
+
+from chaos import KINDS, PROBE_KEYS, base_buckets, run_scenario
+
+ENGINES = ("binomial", "jump")
+SEEDS = (11, 23, 37)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scenario_no_violations(engine, kind, seed):
+    res = run_scenario(kind, engine, seed)
+    assert res.violations == []
+    assert res.events > 0
+    assert res.replay_checks > 0
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_flap_measures_recovery_latency(engine):
+    for seed in SEEDS:
+        res = run_scenario("flap", engine, seed)
+        assert res.violations == []
+        # every flap scenario ends with the victim re-admitted, so at least
+        # one fail->recover latency sample exists and all are positive
+        assert res.recovery_latencies
+        assert all(lat > 0 for lat in res.recovery_latencies)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cascade_reaches_unavailable_and_returns(engine):
+    res = run_scenario("cascade", engine, seed=5)
+    assert res.violations == []
+    # the cascade drives the fleet through n_alive == 0: some probe
+    # attempts are (correctly) answered with FleetUnavailableError
+    assert res.route_unavailable > 0
+    assert res.availability < 1.0
+
+
+def test_base_buckets_cached_and_in_range():
+    b1 = base_buckets("binomial32", 8)
+    b2 = base_buckets("binomial32", 8)
+    assert b1 is b2  # cache hit
+    assert b1.shape == PROBE_KEYS.shape
+    assert ((b1 >= 0) & (b1 < 8)).all()
+    assert np.unique(b1).size > 1  # keys actually spread
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown scenario kind"):
+        run_scenario("meteor", "binomial", 0)

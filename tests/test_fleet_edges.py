@@ -1,0 +1,171 @@
+"""All-failed / one-alive fleet edges across both engines and every route
+entry point: typed ``FleetUnavailableError`` instead of undefined behavior.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.serving.batch_router import BatchRouter
+from repro.serving.engine import Request, ServingTier
+from repro.serving.lifecycle import FleetUnavailableError
+from repro.serving.router import SessionRouter
+
+ENGINES = ("binomial", "jump")
+KEYS = np.random.default_rng(77).integers(0, 1 << 32, 512, dtype=np.uint32)
+IDS = np.random.default_rng(78).integers(0, 1 << 63, 256, dtype=np.uint64)
+
+
+def fail_all(r: BatchRouter) -> None:
+    # fail low slots first so the last one takes the tombstone branch
+    # (slot space intact, n_alive == 0) rather than a LIFO shrink
+    for s in range(r.domain.total_count):
+        r.fail(s)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_router_all_failed_raises_typed(engine):
+    r = BatchRouter(4, engine=engine)
+    fail_all(r)
+    assert r.alive == 0
+    assert r.domain.total_count == 4  # tombstones, not a shrink
+    with pytest.raises(FleetUnavailableError):
+        r.route_keys(KEYS)
+    with pytest.raises(FleetUnavailableError):
+        r.route_keys_np(KEYS)
+    with pytest.raises(FleetUnavailableError):
+        r.route_ids(IDS)
+    with pytest.raises(FleetUnavailableError):
+        r.route_batch([f"s{i}" for i in range(16)])
+    # the guard fires before any device dispatch — epoch is attached
+    with pytest.raises(FleetUnavailableError) as exc:
+        r.route_keys(KEYS)
+    assert exc.value.epoch == r.routing_epoch == 4
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_router_single_survivor_routes_everything_to_it(engine):
+    r = BatchRouter(5, engine=engine)
+    for s in (0, 1, 3, 4):
+        r.fail(s)
+    assert r.alive == 1
+    assert set(r.route_keys_np(KEYS).tolist()) == {2}
+    assert set(np.asarray(r.route_ids(IDS)).tolist()) == {2}
+    assert set(r.route_batch([f"u{i}" for i in range(64)]).tolist()) == {2}
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_router_recover_from_empty_restores_bit_exact(engine):
+    r = BatchRouter(6, engine=engine)
+    before = r.route_keys_np(KEYS)
+    fail_all(r)
+    with pytest.raises(FleetUnavailableError):
+        r.route_keys(KEYS)
+    for s in range(6):
+        r.recover(s)
+    assert r.alive == 6
+    np.testing.assert_array_equal(r.route_keys_np(KEYS), before)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_router_empty_batch_on_empty_fleet_still_typed(engine):
+    r = BatchRouter(3, engine=engine)
+    fail_all(r)
+    # zero keys to route, but the fleet is still unavailable: the typed
+    # error wins (callers must not infer health from an empty answer)
+    with pytest.raises(FleetUnavailableError):
+        r.route_keys(np.empty(0, dtype=np.uint32))
+
+
+def test_session_router_all_failed_raises_typed():
+    r = SessionRouter(3, engine="binomial32", chain_bits=32, resolve="table",
+                      allow_empty=True)
+    for s in range(3):
+        r.fail(s)
+    assert r.alive == 0
+    with pytest.raises(FleetUnavailableError):
+        r.route("sess-1")
+    r.recover(1)
+    assert r.route("sess-1") == 1
+
+
+def test_session_router_default_still_refuses_last_removal():
+    r = SessionRouter(2)
+    r.fail(0)
+    with pytest.raises(ValueError, match="last alive bucket"):
+        r.fail(1)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("stablelm-3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_serving_tier_all_failed_raises_typed(tiny_model, engine):
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=3, max_len=32, engine=engine)
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(f"s{i}", rng.integers(0, cfg.vocab_size, 4).astype(np.int32), n_new=2)
+        for i in range(4)
+    ]
+    assert set(tier.serve(reqs)) == {r.session_id for r in reqs}
+    for s in range(3):
+        tier.fail(s)
+    with pytest.raises(FleetUnavailableError):
+        tier.serve(reqs)
+    tier.recover(2)
+    res = tier.serve(reqs)
+    assert set(res) == {r.session_id for r in reqs}
+
+
+def test_serving_tier_single_survivor_serves_all(tiny_model):
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=3, max_len=32)
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(f"u{i}", rng.integers(0, cfg.vocab_size, 4).astype(np.int32), n_new=2)
+        for i in range(6)
+    ]
+    tier.fail(0)
+    tier.fail(2)
+    res = tier.serve(reqs)
+    assert set(res) == {r.session_id for r in reqs}
+    assert tier.replicas[1].steps_served > 0
+    assert tier.replicas[0].steps_served == 0
+
+
+def test_serving_tier_lifecycle_detector_reroutes(tiny_model):
+    from repro.serving.lifecycle import LifecycleConfig, ManualClock
+
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=3, max_len=32)
+    clk = ManualClock()
+    mgr = tier.attach_lifecycle(LifecycleConfig(), clock=clk)
+    hb = mgr.config.heartbeat
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(f"r{i}", rng.integers(0, cfg.vocab_size, 4).astype(np.int32), n_new=2)
+        for i in range(6)
+    ]
+    tier.serve(reqs)
+    # replica 1 stops beating; the next serve tick removes it
+    clk.advance(hb.fail_after + 1)
+    tier.heartbeat(0)
+    tier.heartbeat(2)
+    res = tier.serve(reqs)
+    assert set(res) == {r.session_id for r in reqs}
+    assert mgr.n_alive == 2
+    assert 1 in tier.router.domain.removed
+    mgr.verify_replay()
+
+
+def test_serving_tier_requires_attach_before_heartbeat(tiny_model):
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=2, max_len=32)
+    with pytest.raises(RuntimeError, match="attach_lifecycle"):
+        tier.heartbeat(0)

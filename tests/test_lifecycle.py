@@ -1,0 +1,554 @@
+"""Lifecycle robustness layer: journal replay parity, failure detection,
+coalescing, degradation modes (DESIGN.md §12).
+
+The journal/replay properties run under hypothesis when available, with
+seeded fallback grids so the invariants stay covered either way.
+"""
+import numpy as np
+import pytest
+
+from repro.placement.elastic import FailureDomain
+from repro.serving.batch_router import BatchRouter
+from repro.serving.lifecycle import (
+    ALIVE,
+    QUARANTINED,
+    REMOVED,
+    SUSPECT,
+    FailureDetector,
+    FleetDegradedError,
+    FleetUnavailableError,
+    HeartbeatConfig,
+    JournalSnapshot,
+    LifecycleConfig,
+    LifecycleManager,
+    ManualClock,
+    MembershipEvent,
+    MembershipJournal,
+    apply_event,
+    replay,
+    restore,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in the image
+    HAVE_HYPOTHESIS = False
+
+
+def make_domain(n: int) -> FailureDomain:
+    """The flavour the batched datapath's scalar oracle uses."""
+    return FailureDomain(
+        n, engine="binomial32", chain_bits=32, resolve="table", allow_empty=True
+    )
+
+
+# -- journal basics -----------------------------------------------------------
+
+def test_journal_epochs_are_dense_and_one_based():
+    j = MembershipJournal(4)
+    assert j.epoch == 0
+    e1 = j.record("fail", 2)
+    e2 = j.record("recover", 2)
+    assert (e1.epoch, e2.epoch) == (1, 2)
+    assert j.epoch == 2
+    assert j.events() == (e1, e2)
+    assert j.events(since=1) == (e2,)
+
+
+def test_journal_rejects_unknown_kind_and_bad_since():
+    j = MembershipJournal(2)
+    with pytest.raises(ValueError, match="unknown event kind"):
+        j.record("explode", 0)
+    with pytest.raises(ValueError, match="since"):
+        j.events(since=-1)
+    with pytest.raises(ValueError, match="n_initial"):
+        MembershipJournal(0)
+
+
+def test_journal_jsonl_round_trip():
+    j = MembershipJournal(6)
+    j.record("fail", 1)
+    j.record("scale_up", 6)
+    j.record("recover", 1)
+    j2 = MembershipJournal.from_jsonl(j.to_jsonl())
+    assert j2.n_initial == 6
+    assert j2.events() == j.events()
+
+
+def test_journal_jsonl_detects_epoch_corruption():
+    j = MembershipJournal(3)
+    j.record("fail", 0)
+    lines = j.to_jsonl().splitlines()
+    tampered = "\n".join([lines[0], lines[1].replace('"epoch": 1', '"epoch": 7')])
+    with pytest.raises(ValueError, match="journal corrupt"):
+        MembershipJournal.from_jsonl(tampered)
+    with pytest.raises(ValueError, match="empty journal"):
+        MembershipJournal.from_jsonl("")
+
+
+def test_snapshot_json_round_trip():
+    d = make_domain(5)
+    d.fail(2)
+    snap = JournalSnapshot.capture(1, d)
+    back = JournalSnapshot.from_json(snap.to_json())
+    assert back == snap
+    assert back.removed == (2,)
+    assert back.n_alive == 4
+
+
+def test_replay_checks_scale_determinism():
+    d = make_domain(3)
+    with pytest.raises(ValueError, match="replay divergence"):
+        apply_event(d, MembershipEvent(epoch=1, kind="scale_up", slot=99))
+    with pytest.raises(ValueError, match="replay divergence"):
+        apply_event(d, MembershipEvent(epoch=1, kind="scale_down", slot=99))
+
+
+def test_restore_requires_table_domain():
+    d = make_domain(3)
+    snap = JournalSnapshot.capture(0, d)
+
+    def chain_factory(n):
+        return FailureDomain(n, engine="binomial32", chain_bits=32)
+
+    with pytest.raises(ValueError, match="resolve='table'"):
+        restore(snap, chain_factory)
+
+
+# -- replay parity: arbitrary event streams ----------------------------------
+
+def _drive(domain, journal, decisions) -> None:
+    """Interpret a decision stream as valid membership events, mirroring
+    each into the journal (exactly what LifecycleManager does)."""
+    cap = domain.total_count + 8
+    for d in decisions:
+        total, removed = domain.total_count, sorted(domain.removed)
+        alive = [s for s in range(total) if s not in domain.removed]
+        ops = []
+        if alive:
+            ops.append(("fail", alive[d % len(alive)]))
+        if removed:
+            ops.append(("recover", removed[d % len(removed)]))
+        if total < cap:
+            ops.append(("scale_up", None))
+        if len(alive) > 1 or (len(alive) == 1 and (total - 1) not in domain.removed):
+            ops.append(("scale_down", None))
+        kind, slot = ops[d % len(ops)]
+        if kind == "fail":
+            domain.fail(slot)
+        elif kind == "recover":
+            domain.recover(slot)
+        elif kind == "scale_up":
+            slot = domain.scale_up()
+        else:
+            slot = domain.scale_down()
+        journal.record(kind, slot)
+
+
+def _assert_same_state(a, b) -> None:
+    assert a.total_count == b.total_count
+    assert a.removed == b.removed
+    ra, rb = a.replacement_table, b.replacement_table
+    assert ra.slots == rb.slots
+    assert ra.pos == rb.pos
+    assert ra.n_alive == rb.n_alive
+
+
+def _check_replay_parity(n_initial, decisions, crash_at):
+    live = make_domain(n_initial)
+    journal = MembershipJournal(n_initial)
+    snapshots = {}
+    for i, d in enumerate(decisions):
+        _drive(live, journal, [d])
+        if i == crash_at:
+            snapshots[journal.epoch] = JournalSnapshot.capture(journal.epoch, live)
+    # genesis replay == live
+    _assert_same_state(replay(journal, make_domain), live)
+    # JSONL crash: text is all that survives
+    revived = MembershipJournal.from_jsonl(journal.to_jsonl())
+    _assert_same_state(replay(revived, make_domain), live)
+    # crash at an arbitrary event index: snapshot + tail == live
+    for epoch, snap in snapshots.items():
+        rebuilt = restore(snap, make_domain, journal.events(since=epoch))
+        _assert_same_state(rebuilt, live)
+    # prefix replay parity: upto the snapshot epoch reproduces the snapshot
+    for epoch, snap in snapshots.items():
+        pre = replay(journal, make_domain, upto=epoch)
+        assert JournalSnapshot.capture(epoch, pre) == snap
+
+
+SEEDED_STREAMS = [
+    (1, [0]),
+    (4, [0, 1, 2, 3, 0, 1]),
+    (6, list(np.random.default_rng(7).integers(0, 1 << 16, 40))),
+    (3, list(np.random.default_rng(8).integers(0, 1 << 16, 60))),
+    (12, list(np.random.default_rng(9).integers(0, 1 << 16, 80))),
+]
+
+
+@pytest.mark.parametrize("n_initial,decisions", SEEDED_STREAMS)
+def test_replay_parity_seeded(n_initial, decisions):
+    crash_at = len(decisions) // 2
+    _check_replay_parity(n_initial, [int(d) for d in decisions], crash_at)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        st.integers(min_value=1, max_value=12),
+        st.lists(st.integers(min_value=0, max_value=(1 << 16) - 1), max_size=40),
+        st.integers(min_value=0, max_value=39),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_replay_parity_property(n_initial, decisions, crash_at):
+        _check_replay_parity(n_initial, decisions, min(crash_at, max(len(decisions) - 1, 0)))
+
+
+# -- failure detector ---------------------------------------------------------
+
+def _beat_all(det, slots, skip=()):
+    for s in slots:
+        if s not in skip:
+            det.heartbeat(s)
+
+
+def test_detector_quiet_fleet_emits_nothing():
+    clk = ManualClock()
+    det = FailureDetector(range(4), clock=clk)
+    for _ in range(10):
+        clk.advance(1.0)
+        _beat_all(det, range(4))
+        assert det.poll() == []
+    assert all(det.state_of(s) == ALIVE for s in range(4))
+
+
+def test_detector_suspect_hysteresis_no_event():
+    clk = ManualClock()
+    det = FailureDetector(range(2), clock=clk)
+    clk.advance(4.0)  # > suspect_after, < fail_after
+    assert det.poll() == []
+    assert det.state_of(0) == SUSPECT
+    det.heartbeat(0)
+    assert det.state_of(0) == ALIVE  # recovered silently
+    det.heartbeat(1)
+    assert det.poll() == []
+
+
+def test_detector_fail_emitted_once_then_recover_after_stable_window():
+    clk = ManualClock()
+    cfg = HeartbeatConfig()
+    det = FailureDetector(range(3), cfg, clk)
+    clk.advance(cfg.fail_after + 0.5)
+    _beat_all(det, range(3), skip=(1,))
+    assert det.poll() == [("fail", 1)]
+    assert det.state_of(1) == REMOVED
+    # still silent: no duplicate event
+    clk.advance(1.0)
+    _beat_all(det, range(3), skip=(1,))
+    assert det.poll() == []
+    # beats resume: quarantined, readmitted only after the stable window
+    det.heartbeat(1)
+    assert det.state_of(1) == QUARANTINED
+    t, events = 0.0, []
+    while t < cfg.readmit_after + 1.0:
+        clk.advance(1.0)
+        t += 1.0
+        _beat_all(det, range(3))
+        events += det.poll()
+    assert events == [("recover", 1)]
+    assert det.state_of(1) == ALIVE
+
+
+def test_detector_quarantine_window_restarts_on_gap():
+    clk = ManualClock()
+    cfg = HeartbeatConfig()
+    det = FailureDetector([0], cfg, clk)
+    clk.advance(cfg.fail_after + 1)
+    assert det.poll() == [("fail", 0)]
+    det.heartbeat(0)  # quarantined
+    clk.advance(cfg.readmit_after - 1)
+    det.heartbeat(0)  # gap > suspect_after: window restarts
+    assert det.poll() == []  # NOT readmitted despite wall time elapsed
+    assert det.state_of(0) == QUARANTINED
+    # now beat steadily through a full window
+    events = []
+    for _ in range(int(cfg.readmit_after) + 1):
+        clk.advance(1.0)
+        det.heartbeat(0)
+        events += det.poll()
+    assert events == [("recover", 0)]
+
+
+def test_detector_quarantine_silence_returns_to_removed_without_event():
+    clk = ManualClock()
+    cfg = HeartbeatConfig()
+    det = FailureDetector([0], cfg, clk)
+    clk.advance(cfg.fail_after + 1)
+    assert det.poll() == [("fail", 0)]
+    det.heartbeat(0)
+    clk.advance(cfg.suspect_after + 1)  # silent during quarantine
+    assert det.poll() == []  # no event: downstream already thinks it failed
+    assert det.state_of(0) == REMOVED
+
+
+def test_detector_flap_backoff_doubles_and_caps():
+    clk = ManualClock()
+    cfg = HeartbeatConfig(
+        readmit_after=4.0, flap_window=1000.0, flap_backoff=2.0,
+        max_readmit_after=10.0,
+    )
+    det = FailureDetector([0], cfg, clk)
+
+    def outage_and_recover():
+        """Silence past fail_after, then beat steadily until readmission;
+        returns (fail->recover latency, events seen)."""
+        clk.advance(cfg.fail_after + 0.5)
+        evs = det.poll()
+        assert evs == [("fail", 0)]
+        det.heartbeat(0)
+        t0 = clk.now()
+        for _ in range(100):
+            clk.advance(1.0)
+            det.heartbeat(0)
+            if det.poll() == [("recover", 0)]:
+                return clk.now() - t0
+        raise AssertionError("never readmitted")
+
+    first = outage_and_recover()
+    second = outage_and_recover()  # re-failed within flap_window: backoff x2
+    third = outage_and_recover()   # x4 = 16 -> capped at 10
+    assert first < second <= third
+    assert second >= 2 * cfg.readmit_after - 1.0
+    assert third <= cfg.max_readmit_after + 1.5
+
+
+def test_detector_register_forget_and_mark_removed():
+    clk = ManualClock()
+    det = FailureDetector([0, 1], clock=clk)
+    det.register(2)
+    assert det.slots == (0, 1, 2)
+    det.forget(1)
+    det.forget(1)  # idempotent
+    assert det.slots == (0, 2)
+    det.mark_removed(2)
+    assert det.state_of(2) == REMOVED
+    det.heartbeat(2)
+    assert det.state_of(2) == QUARANTINED  # must re-earn admission
+
+
+def test_heartbeat_config_validation():
+    with pytest.raises(ValueError):
+        HeartbeatConfig(heartbeat_interval=0)
+    with pytest.raises(ValueError):
+        HeartbeatConfig(suspect_after=1.0, heartbeat_interval=2.0)
+    with pytest.raises(ValueError):
+        HeartbeatConfig(fail_after=1.0)
+    with pytest.raises(ValueError):
+        HeartbeatConfig(readmit_after=0)
+    with pytest.raises(ValueError):
+        ManualClock().advance(-1)
+
+
+def _flap_invariants(decisions):
+    """Property: whatever the beat pattern, per-slot events strictly
+    alternate fail/recover starting with fail."""
+    clk = ManualClock()
+    det = FailureDetector(range(3), clock=clk)
+    last_kind = {s: "recover" for s in range(3)}  # genesis counts as admitted
+    for d in decisions:
+        clk.advance(0.5 + (d % 8) * 0.5)
+        for s in range(3):
+            if (d >> (4 + s)) & 1:
+                det.heartbeat(s)
+        for kind, slot in det.poll():
+            assert kind != last_kind[slot], (
+                f"slot {slot} emitted consecutive {kind!r} events"
+            )
+            last_kind[slot] = kind
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_detector_events_alternate_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _flap_invariants([int(d) for d in rng.integers(0, 1 << 8, 300)])
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.integers(min_value=0, max_value=(1 << 8) - 1), max_size=200))
+    @settings(max_examples=60, deadline=None)
+    def test_detector_events_alternate_property(decisions):
+        _flap_invariants(decisions)
+
+
+# -- lifecycle manager --------------------------------------------------------
+
+def test_manager_rejects_late_attach():
+    r = BatchRouter(4, engine="binomial")
+    r.fail(1)
+    with pytest.raises(ValueError, match="before mutating the fleet"):
+        LifecycleManager(r)
+
+
+def test_lifecycle_config_validation():
+    with pytest.raises(ValueError, match="min_alive_floor"):
+        LifecycleConfig(min_alive_floor=0)
+
+
+@pytest.mark.parametrize("engine", ["binomial", "jump"])
+def test_manager_coalesces_storm_to_one_upload_bit_exact(engine):
+    r = BatchRouter(8, engine=engine)
+    mgr = LifecycleManager(r)
+    uploads = []
+    orig = r._device_put
+    r._device_put = lambda tree: (uploads.append(1), orig(tree))[1]
+    storm = [("fail", 1), ("fail", 2), ("recover", 1), ("fail", 5), ("fail", 3)]
+    mgr.apply(storm)
+    assert len(uploads) == 1  # N events, ONE device upload
+    assert mgr.epoch == r.routing_epoch == len(storm)
+    # final routing is bit-exact vs per-event application
+    twin = BatchRouter(8, engine=engine)
+    for kind, slot in storm:
+        getattr(twin, kind)(slot)
+    keys = np.random.default_rng(3).integers(0, 1 << 32, 2048, dtype=np.uint32)
+    np.testing.assert_array_equal(r.route_keys_np(keys), twin.route_keys_np(keys))
+    mgr.verify_replay()
+
+
+def test_manager_apply_is_atomic_per_burst_and_journaled():
+    r = BatchRouter(6, engine="binomial")
+    mgr = LifecycleManager(r)
+    recorded = mgr.apply([("fail", 0), ("fail", 4), ("recover", 0)])
+    assert [(e.kind, e.slot) for e in recorded] == [
+        ("fail", 0), ("fail", 4), ("recover", 0),
+    ]
+    assert [e.epoch for e in recorded] == [1, 2, 3]
+    assert mgr.apply([]) == []
+    with pytest.raises(ValueError, match="unknown transition kind"):
+        mgr.apply([("teleport", 1)])
+
+
+def test_manager_modes_and_typed_errors():
+    r = BatchRouter(4, engine="binomial")
+    mgr = LifecycleManager(r, LifecycleConfig(min_alive_floor=2))
+    keys = np.arange(64, dtype=np.uint32)
+    assert mgr.mode == "normal"
+    batch = mgr.route_keys_np(keys)
+    assert batch.mode == "normal" and batch.epoch == 0
+    mgr.fail(0)
+    mgr.fail(1)
+    assert mgr.mode == "normal"  # 2 alive == floor
+    mgr.fail(2)
+    assert mgr.mode == "degraded"
+    batch = mgr.route_keys_np(keys)
+    assert batch.mode == "degraded"
+    assert set(np.asarray(batch.replicas).tolist()) == {3}
+    mgr.fail(3)  # tombstones the last alive replica (allow_empty)
+    assert mgr.mode == "unavailable" and mgr.n_alive == 0
+    with pytest.raises(FleetUnavailableError) as exc:
+        mgr.route_keys_np(keys)
+    assert exc.value.epoch == mgr.epoch
+    mgr.recover(3)
+    assert mgr.mode == "degraded"
+    assert np.asarray(mgr.route_keys_np(keys).replicas).tolist() == [3] * 64
+
+
+def test_manager_strict_floor_raises_degraded():
+    r = BatchRouter(4, engine="binomial")
+    mgr = LifecycleManager(r, LifecycleConfig(min_alive_floor=3, strict_floor=True))
+    mgr.fail(1)
+    mgr.fail(2)
+    with pytest.raises(FleetDegradedError) as exc:
+        mgr.route_keys_np(np.arange(8, dtype=np.uint32))
+    assert exc.value.n_alive == 2
+    assert exc.value.floor == 3
+    assert exc.value.epoch == 2
+
+
+def test_manager_scale_events_journal_and_detector():
+    r = BatchRouter(4, engine="binomial")
+    mgr = LifecycleManager(r)
+    new = mgr.scale_up()
+    assert new == 4
+    assert mgr.detector.state_of(4) == ALIVE
+    gone = mgr.scale_down()
+    assert gone == 4
+    assert 4 not in mgr.detector.slots
+    mgr.fail(3)  # LIFO retirement: slot space shrinks, detector follows
+    assert r.domain.total_count == 3
+    assert mgr.detector.slots == (0, 1, 2)
+    mgr.verify_replay()
+    assert [e.kind for e in mgr.journal.events()] == [
+        "scale_up", "scale_down", "fail",
+    ]
+
+
+def test_manager_tick_applies_detector_expiries_coalesced():
+    clk = ManualClock()
+    r = BatchRouter(6, engine="binomial")
+    mgr = LifecycleManager(r, clock=clk)
+    cfg = mgr.config.heartbeat
+    uploads = []
+    orig = r._device_put
+    r._device_put = lambda tree: (uploads.append(1), orig(tree))[1]
+    # three replicas go silent together -> ONE coalesced update
+    clk.advance(cfg.fail_after + 1)
+    for s in (0, 2, 5):
+        mgr.heartbeat(s)
+    events = mgr.tick()
+    assert [(e.kind, e.slot) for e in events] == [
+        ("fail", 1), ("fail", 3), ("fail", 4),
+    ]
+    assert len(uploads) == 1
+    assert mgr.n_alive == 3
+    assert mgr.tick() == []  # no duplicates
+    mgr.verify_replay()
+
+
+def test_manager_route_surfaces_epoch_and_modes():
+    r = BatchRouter(5, engine="jump")
+    mgr = LifecycleManager(r)
+    ids = np.arange(100, dtype=np.uint64)
+    b1 = mgr.route_batch([f"sess-{i}" for i in range(32)])
+    assert b1.epoch == 0 and b1.mode == "normal"
+    mgr.fail(2)
+    b2 = mgr.route_keys(np.arange(64, dtype=np.uint32))
+    assert b2.epoch == 1
+    assert 2 not in set(np.asarray(b2.replicas).tolist())
+    b3 = mgr.route_keys_np(ids.astype(np.uint32))
+    assert b3.epoch == 1 and b3.mode == "normal"
+
+
+def test_manager_replay_parity_after_random_churn():
+    rng = np.random.default_rng(42)
+    r = BatchRouter(8, engine="binomial")
+    mgr = LifecycleManager(r)
+    for _ in range(60):
+        alive = [s for s in range(r.domain.total_count) if s not in r.domain.removed]
+        tomb = sorted(r.domain.removed)
+        roll = rng.random()
+        if roll < 0.45 and alive:
+            mgr.fail(int(rng.choice(alive)))
+        elif roll < 0.8 and tomb:
+            mgr.recover(int(rng.choice(tomb)))
+        elif r.domain.total_count < r.spec.capacity:
+            mgr.scale_up()
+    mgr.verify_replay()
+    mgr.verify_replay(mgr.snapshot())
+    # crash: only the JSONL text survives
+    revived = MembershipJournal.from_jsonl(mgr.journal.to_jsonl())
+    rebuilt = replay(revived, mgr._domain_factory)
+    assert rebuilt.removed == r.domain.removed
+    assert rebuilt.total_count == r.domain.total_count
+    assert rebuilt.replacement_table.slots == r.domain.replacement_table.slots
+
+
+def test_errors_carry_context():
+    e = FleetUnavailableError(epoch=7)
+    assert e.epoch == 7
+    assert "epoch 7" in str(e)
+    d = FleetDegradedError(1, 3, epoch=2)
+    assert (d.n_alive, d.floor, d.epoch) == (1, 3, 2)
+    assert isinstance(d, RuntimeError)

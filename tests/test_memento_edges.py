@@ -154,7 +154,7 @@ def test_deep_second_redirect_is_exercised_and_exact():
     for k in keys[:2048]:
         b = eng.base.get_bucket(int(k))
         if b in eng.removed:
-            h = bits.hash_pair32(bits.hash_iter32(int(k), 1), b)
+            h = bits.hash_pair32(int(k), b)
             if bits.mulhi32(h, eng.table.n_total) >= eng.table.n_alive:
                 deep += 1
     assert deep > 50
