@@ -2,10 +2,11 @@
 
 Drives the scenario library (``tests/chaos.py``) over a seed grid — mass
 failure storms, flapping replicas through the heartbeat detector, cascades
-down to an empty fleet, crash-and-recover mid-stream, and mixed churn —
-against BOTH fused engines, counting invariant violations (alive-only
-routing, minimal disruption, typed unavailability, journal replay parity)
-and measuring:
+down to an empty fleet, crash-and-recover mid-stream, mixed churn, and the
+placement tier's replica-loss and repair-race storylines — against BOTH
+fused engines, counting invariant violations (alive-only routing, minimal
+disruption, typed unavailability, journal replay parity, replica
+durability, repair convergence, bounded repair bandwidth) and measuring:
 
 * **recovery latency** — detector clock seconds from each emitted "fail" to
   the matching "recover" (flap scenarios; hysteresis + flap backoff means
@@ -62,6 +63,7 @@ def run_grid(n_seeds: int) -> dict:
     latencies: list[float] = []
     violations: list[str] = []
     replay_checks = 0
+    repair_copies = 0
     t0 = time.perf_counter()
     for engine in ENGINES:
         for kind in KINDS:
@@ -76,6 +78,7 @@ def run_grid(n_seeds: int) -> dict:
                 latencies.extend(res.recovery_latencies)
                 violations.extend(res.violations)
                 replay_checks += res.replay_checks
+                repair_copies += res.repair_copies
     wall = time.perf_counter() - t0
     total_att = total_unav = 0
     for acc in list(per_kind.values()) + list(per_engine.values()):
@@ -93,6 +96,7 @@ def run_grid(n_seeds: int) -> dict:
         "invariant_violations": len(violations),
         "violation_samples": violations[:20],
         "replay_checks": replay_checks,
+        "repair_copies": repair_copies,
         "availability": 1.0 if total_att == 0 else 1.0 - total_unav / total_att,
         "recovery_latency_s": {
             "samples": len(latencies),

@@ -40,9 +40,16 @@ the fused datapath:
   through the divert path costs at most 25% over a healthy one.
 * **chaos record** (``--chaos-current``, from ``bench_chaos``): zero
   invariant violations is a HARD gate (alive-only routing, minimal
-  disruption, typed unavailability, journal replay parity — a violation is
-  a correctness bug, not a perf regression), overall availability has a
-  floor, and flap scenarios must have produced recovery-latency samples.
+  disruption, typed unavailability, journal replay parity, replica
+  durability, repair convergence — a violation is a correctness bug, not a
+  perf regression), overall availability has a floor, and flap scenarios
+  must have produced recovery-latency samples.
+* **placement record** (``--placement-current``, from ``bench_placement``):
+  every measured migration transition's moved-pair fraction must sit
+  within the theoretical consistent-hashing bound (``within_bound`` — a
+  breach means the R-way tier lost the paper's minimal-disruption
+  property, a correctness bug), and both engines must report positive
+  placement throughput.
 
 The CANONICAL records: full runs (run.py) write the tracked
 ``BENCH_router.json`` at the repo root; ``--smoke`` runs write the
@@ -272,6 +279,31 @@ def check_chaos(chaos: dict) -> list[str]:
     return failures
 
 
+def check_placement(plc: dict) -> list[str]:
+    failures: list[str] = []
+    transitions = plc.get("transitions", [])
+    print(
+        f"placement: r={plc.get('r')} n_keys={plc.get('n_keys')}, "
+        f"{len(transitions)} transition(s), "
+        f"all_within_bound={plc.get('all_within_bound')}"
+    )
+    for t in transitions:
+        if not t.get("within_bound"):
+            failures.append(
+                f"placement migration {t['engine']}/{t['label']} moved "
+                f"fraction {t['moved_fraction']:.4f} breaches the "
+                f"theoretical bound {t['bound']:.4f}"
+            )
+    if not transitions:
+        failures.append("placement record has no migration transitions")
+    for engine, thr in plc.get("throughput", {}).items():
+        if thr.get("keys_per_s", 0) <= 0:
+            failures.append(
+                f"placement throughput for {engine} is not positive"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="benchmarks/out/BENCH_router_smoke.json")
@@ -281,6 +313,12 @@ def main(argv: list[str] | None = None) -> int:
         "--chaos-current", default=None,
         help="bench_chaos record to gate (e.g. benchmarks/out/"
              "BENCH_chaos_smoke.json in CI, BENCH_chaos.json for full runs)",
+    )
+    ap.add_argument(
+        "--placement-current", default=None,
+        help="bench_placement record to gate (e.g. benchmarks/out/"
+             "BENCH_placement_smoke.json in CI, BENCH_placement.json for "
+             "full runs)",
     )
     args = ap.parse_args(argv)
 
@@ -293,6 +331,9 @@ def main(argv: list[str] | None = None) -> int:
     if args.chaos_current:
         with open(args.chaos_current) as f:
             failures += check_chaos(json.load(f))
+    if args.placement_current:
+        with open(args.placement_current) as f:
+            failures += check_placement(json.load(f))
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -22,6 +22,7 @@ def main() -> None:
         bench_kernel,
         bench_lookup,
         bench_moe_routing,
+        bench_placement,
         bench_roofline,
         bench_router,
         bench_theory,
@@ -36,6 +37,7 @@ def main() -> None:
         ("moe routing (hash vs topk)", bench_moe_routing),
         ("session routing (scalar vs batched)", bench_router),
         ("elastic placement", bench_elastic),
+        ("replicated store placement (R-way tier)", bench_placement),
         ("roofline table (from dry-run)", bench_roofline),
     ]
     failures = 0

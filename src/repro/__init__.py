@@ -12,7 +12,10 @@ The curated public surface (``__all__``):
 * ``make`` / ``make_bulk`` + the ``ENGINES`` / ``BULK_ENGINES`` registries —
   the scalar comparison suite and the pluggable device engines;
 * ``SessionRouter`` / ``hash_session_ids`` — the scalar control plane and
-  the vectorised session-id ingest.
+  the vectorised session-id ingest;
+* ``StorePlacement`` / ``PlacementSpec`` / ``PlacementRepairer`` +
+  ``route_replicas_bulk`` / ``placement_diff_bulk`` — the R-way replicated
+  placement tier (DESIGN.md §13).
 
 Attributes resolve lazily (PEP 562): ``import repro`` stays light, and the
 serving stack (models, configs) only loads when actually touched.
@@ -39,6 +42,11 @@ _EXPORTS = {
     "route_ingest_bulk": "repro.kernels.ops",
     "lookup_bulk_dyn": "repro.kernels.ops",
     "make_sharded_route": "repro.kernels.ops",
+    "PlacementSpec": "repro.core.bulk",
+    "StorePlacement": "repro.placement.store",
+    "PlacementRepairer": "repro.serving.lifecycle",
+    "route_replicas_bulk": "repro.kernels.ops",
+    "placement_diff_bulk": "repro.kernels.ops",
 }
 
 __all__ = list(_EXPORTS)

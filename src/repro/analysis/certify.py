@@ -467,6 +467,55 @@ def certify_lifecycle_route(
     return certify_callable(engine_name, "route/lifecycle", tracer, contract=contract)
 
 
+#: the placement pass certifies affinity in the replication factor R, not ω
+#: (ω is a fixed inner parameter of the one fused-route call): ``omega``
+#: here is the BASE R the tracer varies — R, R+1, R+2
+PLACEMENT_CONTRACT = EngineContract(omega=3)
+
+#: fixed re-salt probe bound for the placement trace — FIXED while R varies,
+#: so each additional replica column adds an identical op count (the serving
+#: default ``max_resalt=None`` resolves to r, which would make the per-column
+#: cost itself grow with r and is certified per-spec by the same tracer)
+PLACEMENT_TRACE_MAX_RESALT = 4
+
+
+def certify_placement_route(
+    engine_name: str, contract: Optional[EngineContract] = None
+) -> TargetReport:
+    """Certify the R-way replicated placement pass (DESIGN.md §13).
+
+    ``placement/route_replicas`` is the device pass of
+    ``repro.placement.store``: ONE fused engine route over all R salted key
+    families plus the bounded distinct-resolution probes.  The tracer
+    varies the REPLICATION factor (R, R+1, R+2 — the contract's ``omega``
+    field repurposed as the base R) at a fixed ω and a fixed probe bound:
+    while-free, affine in R (each extra replica column adds exactly the
+    same resolution op count; the broadcast route call is shape-independent
+    in eqn count), u32-closed, zero transfers — the O(1)-per-replica
+    contract, machine-checked like every other engine path.
+    """
+    contract = contract or PLACEMENT_CONTRACT
+    from repro.core.memento_jax import mask_words
+    from repro.core.registry import make_bulk
+    from repro.placement.store import route_replicas_impl
+
+    eng = make_bulk(engine_name)
+    keys, packed, table, state = _fleet_operands(contract)
+    n_words = mask_words(contract.capacity)
+
+    def tracer(r):
+        return jax.make_jaxpr(
+            lambda k, p, t, s: route_replicas_impl(
+                k, p, t, s, r=r, omega=16, n_words=n_words,
+                max_resalt=PLACEMENT_TRACE_MAX_RESALT, route=eng.route,
+            )
+        )(keys, packed, table, state)
+
+    return certify_callable(
+        engine_name, "placement/route_replicas", tracer, contract=contract
+    )
+
+
 def certify_all(
     engines: Optional[Iterable[str]] = None, *, include_chain_baseline: bool = True
 ) -> Report:
@@ -478,6 +527,7 @@ def certify_all(
     for name in names:
         report.targets.extend(certify_engine(name))
         report.targets.append(certify_lifecycle_route(name))
+        report.targets.append(certify_placement_route(name))
     if include_chain_baseline:
         report.targets.append(certify_chain_baseline())
     return report

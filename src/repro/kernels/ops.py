@@ -134,6 +134,54 @@ def route_ingest_bulk(
     )
 
 
+def route_replicas_bulk(keys: jax.Array, fleet: FleetState, pspec) -> tuple:
+    """R-way replicated placement: keys + fleet state -> ``(replicas (N, r)
+    i32 distinct alive shards, exhausted (N,) bool)``, ONE dispatch.
+
+    The placement tier's device pass (DESIGN.md §13): all ``r`` salted key
+    families route through the spec'd engine's fused jnp datapath as one
+    broadcast batch, then the bounded re-salt resolution breaks inter-family
+    collisions in-trace.  Engine resolved per call like every dispatcher
+    here; the pass is pure-jnp on every backend (the resolution is
+    elementwise + gathers — XLA fuses it; no Pallas twin).
+
+    keys   any int shape (u32 key space); fleet  ``FleetState``;
+    pspec  ``PlacementSpec`` — replication r, probe bound, the RouterSpec
+    """
+    from repro.placement.store import _route_replicas_jit  # late: placement
+    # imports this module
+
+    spec = pspec.router
+    eng = _engine(spec)
+    return _route_replicas_jit(
+        keys, fleet.packed, fleet.table, fleet.state,
+        r=pspec.r, omega=spec.omega, n_words=spec.n_words,
+        max_resalt=pspec.resolved_max_resalt, route=eng.route,
+    )
+
+
+def placement_diff_bulk(
+    keys: jax.Array, fleet_old: FleetState, fleet_new: FleetState, pspec
+) -> tuple:
+    """Bulk migration diff: both placements + the transfer mask in ONE
+    dispatch — ``(old (N, r), new (N, r), moved (N, r) bool, exhausted)``
+    with ``moved[i, j] = new[i, j] not in old[i, :]`` (membership, not
+    positional inequality: a column swap is free, only a shard with no
+    prior copy needs bytes).  Operand contract as ``route_replicas_bulk``.
+    """
+    from repro.placement.store import _placement_diff_jit
+
+    spec = pspec.router
+    eng = _engine(spec)
+    return _placement_diff_jit(
+        keys,
+        fleet_old.packed, fleet_old.table, fleet_old.state,
+        fleet_new.packed, fleet_new.table, fleet_new.state,
+        r=pspec.r, omega=spec.omega, n_words=spec.n_words,
+        max_resalt=pspec.resolved_max_resalt, route=eng.route,
+    )
+
+
 def lookup_bulk_dyn(keys: jax.Array, n, spec: RouterSpec) -> jax.Array:
     """Plain dynamic-n bulk lookup for the spec's engine: n is traced, so
     elastic resize never retraces.  The two-pass baseline's first dispatch

@@ -4,13 +4,36 @@ The control-plane face of the paper: given a set of logical keys (data
 shards, experts, checkpoint shards, sessions) and a cluster size, produce the
 assignment and — on resize — the minimal movement plan, with stats that the
 tests check against the paper's guarantees (movement fraction ~ delta/n).
+
+``MovementPlan`` is the ONE movement-accounting type: canonically a thin
+view over a before/after placement diff (``from_diff`` — host arrays here,
+the device migration diff in ``repro.placement.store``), with the eager
+``Move`` list materialised lazily on demand.  The pre-diff eager
+constructor ``MovementPlan(moves, total_keys)`` remains as a deprecation
+shim (warn-once, like the pre-spec shims in ``repro.kernels.ops``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, Sequence
+import warnings
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
 
 from repro.core import make
+
+#: deprecation shims that already warned this process (warn once, not per
+#: plan; tests reset this to assert the warning fires)
+_warned: set[str] = set()
+
+
+def _warn_once(name: str, hint: str) -> None:
+    if name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"{name} is deprecated; {hint}", DeprecationWarning, stacklevel=3
+    )
 
 
 @dataclass(frozen=True)
@@ -20,20 +43,75 @@ class Move:
     dst: int
 
 
-@dataclass
 class MovementPlan:
-    moves: list[Move]
-    total_keys: int
+    """Movement accounting over a before/after placement diff.
+
+    Build with ``MovementPlan.from_diff(keys, before, after)`` — arrays in,
+    vectorised stats out; ``moves`` materialises the eager ``Move`` list
+    only when asked.  ``moved`` defaults to positional inequality (the
+    1-way assignment semantics); the R-way device diff passes its
+    membership-based transfer mask instead, so both tiers share one
+    accounting type.
+    """
+
+    def __init__(self, moves=None, total_keys: int | None = None, *,
+                 keys=None, before=None, after=None, moved=None):
+        if before is not None:
+            self._keys = np.asarray(keys)
+            self._before = np.asarray(before)
+            self._after = np.asarray(after)
+            if moved is None:
+                moved = self._before != self._after
+            self._moved = np.asarray(moved, bool)
+            self._moves: list[Move] | None = None
+            self.total_keys = int(self._keys.size)
+        else:
+            _warn_once(
+                "MovementPlan(moves, total_keys)",
+                "build plans from the placement diff: "
+                "MovementPlan.from_diff(keys, before, after)",
+            )
+            self._moves = list(moves or [])
+            self.total_keys = int(total_keys or 0)
+            self._keys = self._before = self._after = self._moved = None
+
+    @classmethod
+    def from_diff(cls, keys, before, after, moved=None) -> "MovementPlan":
+        """The canonical constructor: per-key placements before/after (any
+        array-likes of equal length), optional explicit transfer mask."""
+        return cls(keys=keys, before=before, after=after, moved=moved)
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def moved_count(self) -> int:
+        if self._moved is not None:
+            return int(self._moved.sum())
+        return len(self._moves)
+
+    @property
+    def moves(self) -> list[Move]:
+        if self._moves is None:
+            idx = np.nonzero(self._moved)[0]
+            self._moves = [
+                Move(int(self._keys[i]), int(self._before[i]),
+                     int(self._after[i]))
+                for i in idx
+            ]
+        return self._moves
 
     @property
     def moved_fraction(self) -> float:
-        return len(self.moves) / max(self.total_keys, 1)
+        return self.moved_count / max(self.total_keys, 1)
 
     def destinations(self) -> set[int]:
-        return {m.dst for m in self.moves}
+        if self._moved is not None:
+            return set(np.unique(self._after[self._moved]).tolist())
+        return {m.dst for m in self._moves}
 
     def sources(self) -> set[int]:
-        return {m.src for m in self.moves}
+        if self._moved is not None:
+            return set(np.unique(self._before[self._moved]).tolist())
+        return {m.src for m in self._moves}
 
 
 class Assignment:
@@ -65,8 +143,13 @@ class Assignment:
         while self.engine.size > new_n:
             self.engine.remove_bucket()
         after = self.table()
-        moves = [Move(k, before[k], after[k]) for k in self.keys if before[k] != after[k]]
-        return MovementPlan(moves, len(self.keys))
+        return MovementPlan.from_diff(
+            np.asarray(self.keys, dtype=np.uint64),
+            np.fromiter((before[k] for k in self.keys), np.int64,
+                        count=len(self.keys)),
+            np.fromiter((after[k] for k in self.keys), np.int64,
+                        count=len(self.keys)),
+        )
 
     def load(self) -> list[int]:
         return [len(v) for v in self.by_node().values()]

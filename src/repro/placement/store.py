@@ -1,0 +1,531 @@
+"""R-way replicated store placement on top of any ``BULK_ENGINES`` engine
+(DESIGN.md §13).
+
+The paper's actual use case is data placement: "distributed storage systems
+rely on consistent hashing for scalable and fault-tolerant data
+partitioning."  A router maps a key to exactly ONE shard, so a single
+failure makes the key's data unreachable until the divert reroutes it —
+and the rerouted shard does not *have* the data.  This module turns the
+router into a placement system: every key lives on **R distinct alive
+shards**, failures degrade reads to the surviving replica set, and
+membership changes produce an explicit, bounded migration plan instead of
+silent rerouting.
+
+Three layers:
+
+* ``route_replicas_impl`` — the device pass.  R salted key families (the
+  same broadcast construction ``models/layers/moe.py`` uses for multi-K
+  expert routing) go through ONE fused engine route, then a deterministic
+  distinct-resolution pass breaks inter-family collisions: a per-lane used-
+  shard bitmask (``n_words`` u32 words, the same select-cascade shape as
+  the divert's membership test) detects a duplicate, a re-salt hash picks a
+  fresh position in the table's alive prefix, and up to ``max_resalt``
+  linear probes (+1 with conditional wrap — no division) settle it.  The
+  default bound of ``r`` probes makes distinctness DETERMINISTIC whenever
+  ``n_alive > column`` (column ``j`` probes ``j+1`` distinct alive-prefix
+  positions, at most ``j`` of which are taken), so every key gets exactly
+  ``min(r, n_alive)`` distinct alive shards.  While-free, affine in ``r``,
+  u32-closed, zero transfers — certified as ``placement/route_replicas``.
+
+* ``StorePlacement`` — the host control plane: guarded placement with typed
+  degradation (``n_alive == 0`` stays ``FleetUnavailableError``;
+  ``n_alive < r`` is mode ``"degraded"`` or a ``PlacementDegradedError``
+  under ``strict=True``; a too-tight explicit ``max_resalt`` surfaces as
+  ``PlacementExhaustedError``, never a silent duplicate), a registry of
+  placed keys with their current *holders* (where the data physically is —
+  which lags the target placement until repair completes), degraded reads
+  from the surviving holder set, and ``plan_migration`` — the old-vs-new
+  placement diff as ONE device pass producing per-shard move lists.
+
+* ``PlacementRepairer`` (``repro.serving.lifecycle.manager``) — the repair
+  scheduler that drives holders back to the target placement in bounded-
+  bandwidth batches after every journaled membership event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binomial_jax import GOLDEN32, mix32, mulhi32
+from repro.core.bulk import FleetState, PlacementSpec, RouterSpec
+from repro.kernels import ops
+from repro.placement.assignment import MovementPlan
+from repro.serving.lifecycle.errors import (
+    MODE_DEGRADED,
+    MODE_NORMAL,
+    FleetUnavailableError,
+    PlacementDegradedError,
+    PlacementExhaustedError,
+)
+
+#: salt seeding the re-salt chain — distinct from every family salt so the
+#: resolution probes decorrelate from the base placements they collide with
+RESALT_SALT = np.uint32(0x7F4A7C15)
+
+#: sentinel holder id: "this replica column holds no copy anywhere"
+NO_HOLDER = -1
+
+
+def family_salts(r: int) -> np.ndarray:
+    """The ``r`` static per-replica salts — the MoE layer's per-k schedule
+    ``(k * 7919 + 1) * GOLDEN32`` (``models/layers/moe.py``), so replica
+    family 0 is the plain router placement."""
+    base = (np.arange(r, dtype=np.uint64) * 7919 + 1).astype(np.uint32)
+    return base * np.uint32(GOLDEN32)
+
+
+# ---------------------------------------------------------------------------
+# the device pass
+# ---------------------------------------------------------------------------
+
+
+def route_replicas_impl(
+    keys: jax.Array,
+    packed_mask: jax.Array,
+    table: jax.Array,
+    state: jax.Array,
+    *,
+    r: int,
+    omega: int,
+    n_words: int,
+    max_resalt: int,
+    route,
+) -> tuple[jax.Array, jax.Array]:
+    """Place every key on ``r`` distinct alive shards — ONE traced pass.
+
+    keys         (N,) u32 key space (any int dtype; truncated like the
+                 scalar oracle)
+    packed_mask / table / state — the ``FleetState`` leaves (operand
+                 contract of the fused engines; ``n_alive >= 1`` is the
+                 caller-guarded precondition, as for ``route_bulk``)
+    r            replication factor (static)
+    max_resalt   static probe bound per column (``PlacementSpec``
+                 resolves ``None`` to ``r``, the distinctness guarantee)
+    route        the engine's fused jnp route
+                 ``(keys, packed, table, state, omega=, n_words=)``
+
+    Returns ``(replicas, exhausted)``: ``replicas`` is ``(N, r)`` int32,
+    every entry an ALIVE shard; column ``j`` is distinct from columns
+    ``< j`` whenever ``n_alive > j`` and the probe bound sufficed, and a
+    duplicate of an earlier column otherwise (degraded replication — the
+    fleet is smaller than ``j+1``).  ``exhausted`` is ``(N,)`` bool, set
+    for keys where distinctness was achievable (``n_alive > j``) but
+    ``max_resalt`` probes ran out — impossible at the default bound.
+
+    The whole pass is one fused-route call (eqn count independent of
+    ``r`` — all families route as one broadcast batch) plus O(r * (n_words
+    + max_resalt)) elementwise resolution ops: while-free and affine in
+    ``r`` at a fixed probe bound, which is exactly what the certifier's
+    ``placement/route_replicas`` target pins.
+    """
+    keys_u32 = keys.reshape(-1).astype(jnp.uint32)
+    n_alive = state[1].astype(jnp.uint32)
+    slots = table[0].astype(jnp.uint32)
+
+    # all r salted families through the fused engine as ONE broadcast batch
+    fam = mix32(keys_u32[:, None] ^ family_salts(r))  # (N, r) u32
+    base = route(
+        fam, packed_mask, table, state, omega=omega, n_words=n_words
+    ).astype(jnp.uint32)
+
+    # per-lane used-shard bitmask: n_words u32 words, set/tested via the
+    # same select cascade the divert uses for the removed mask
+    used = [jnp.zeros_like(keys_u32) for _ in range(n_words)]
+
+    def is_used(b):
+        w = b >> np.uint32(5)
+        word = jnp.zeros_like(b)
+        for s in range(n_words):
+            word = jnp.where(w == np.uint32(s), used[s], word)
+        return ((word >> (b & np.uint32(31))) & np.uint32(1)) != 0
+
+    def mark_used(b):
+        w = b >> np.uint32(5)
+        bit = jnp.uint32(1) << (b & np.uint32(31))
+        for s in range(n_words):
+            used[s] = jnp.where(w == np.uint32(s), used[s] | bit, used[s])
+
+    cols = []
+    exhausted = jnp.zeros(keys_u32.shape, bool)
+    for j in range(r):
+        b = base[:, j]
+        if j > 0:
+            coll = is_used(b)
+            # re-salt into the alive-prefix POSITION space (every position
+            # < n_alive holds an alive shard by the table's construction),
+            # then probe linearly with a conditional-subtract wrap: the
+            # probes visit min(max_resalt, n_alive) DISTINCT positions, of
+            # which at most j are taken, so max_resalt >= j+1 guarantees a
+            # distinct alive shard whenever n_alive > j
+            q = mulhi32(mix32(fam[:, j] ^ RESALT_SALT), n_alive)
+            for _probe in range(max_resalt):
+                cand = slots.at[q].get(mode="promise_in_bounds")
+                free = coll & ~is_used(cand)
+                b = jnp.where(free, cand, b)
+                coll = coll & ~free
+                q = q + np.uint32(1)
+                q = jnp.where(q >= n_alive, q - n_alive, q)
+            # n_alive <= j: a duplicate is the DEFINED degraded answer
+            # (j+1 distinct shards cannot exist), not an exhaustion
+            exhausted = exhausted | (coll & (np.uint32(j) < n_alive))
+        mark_used(b)
+        cols.append(b)
+
+    replicas = jnp.stack(cols, axis=-1).astype(jnp.int32)
+    return replicas.reshape(*keys.shape, r), exhausted.reshape(keys.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r", "omega", "n_words", "max_resalt", "route")
+)
+def _route_replicas_jit(keys, packed, table, state, *, r, omega, n_words,
+                        max_resalt, route):
+    return route_replicas_impl(
+        keys, packed, table, state, r=r, omega=omega, n_words=n_words,
+        max_resalt=max_resalt, route=route,
+    )
+
+
+def placement_diff_impl(
+    keys, old_packed, old_table, old_state, new_packed, new_table, new_state,
+    *, r, omega, n_words, max_resalt, route,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Old-vs-new placement diff — the bulk migration plan, ONE traced pass.
+
+    Routes the keys under BOTH fleet states and marks every (key, column)
+    pair whose new shard holds no copy under the old placement:
+    ``moved[i, j] = new[i, j] not in old[i, :]`` — membership, not
+    positional inequality, because a replica that merely swapped columns
+    needs no data transfer.  Returns ``(old, new, moved, exhausted_new)``.
+    """
+    old, _ = route_replicas_impl(
+        keys, old_packed, old_table, old_state, r=r, omega=omega,
+        n_words=n_words, max_resalt=max_resalt, route=route,
+    )
+    new, exhausted = route_replicas_impl(
+        keys, new_packed, new_table, new_state, r=r, omega=omega,
+        n_words=n_words, max_resalt=max_resalt, route=route,
+    )
+    moved = jnp.ones(new.shape, bool)
+    for k in range(r):
+        moved = moved & (new != old[..., k : k + 1])
+    return old, new, moved, exhausted
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r", "omega", "n_words", "max_resalt", "route")
+)
+def _placement_diff_jit(keys, op, ot, os_, np_, nt, ns, *, r, omega, n_words,
+                        max_resalt, route):
+    return placement_diff_impl(
+        keys, op, ot, os_, np_, nt, ns, r=r, omega=omega, n_words=n_words,
+        max_resalt=max_resalt, route=route,
+    )
+
+
+# ---------------------------------------------------------------------------
+# host plans
+# ---------------------------------------------------------------------------
+
+
+class PlacedBatch(NamedTuple):
+    """A placed key batch + the epoch/mode it was computed under (the
+    placement tier's mirror of the lifecycle ``RoutedBatch``)."""
+
+    replicas: object  #: (N, r) int32 alive shard ids, distinct per row up
+    #: to min(r, n_alive)
+    epoch: int
+    mode: str  #: MODE_NORMAL, or MODE_DEGRADED when n_alive < r
+    n_distinct: int  #: min(r, n_alive) at placement time
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """The materialised old-vs-new placement diff of one membership change.
+
+    keys   (M,) u32; old/new (M, r) int32 placements; moved (M, r) bool —
+    True where ``new[i, j]`` holds no copy under ``old[i, :]`` (a genuine
+    data transfer, computed device-side by ``placement_diff_impl``).
+    """
+
+    keys: np.ndarray
+    old: np.ndarray
+    new: np.ndarray
+    moved: np.ndarray
+    epoch: int = 0
+
+    @property
+    def total_pairs(self) -> int:
+        return int(self.moved.size)
+
+    @property
+    def moved_pairs(self) -> int:
+        return int(self.moved.sum())
+
+    @property
+    def moved_fraction(self) -> float:
+        return self.moved_pairs / max(self.total_pairs, 1)
+
+    def per_shard_moves(self) -> dict[int, list[tuple[int, int]]]:
+        """Destination shard -> [(key, source shard)] move lists — the
+        worker-facing transfer schedule.  The source is the same-column old
+        holder (a shard that had a copy under the old placement; the
+        repairer re-picks a *reachable* source at execution time)."""
+        out: dict[int, list[tuple[int, int]]] = {}
+        for i, j in zip(*np.nonzero(self.moved)):
+            out.setdefault(int(self.new[i, j]), []).append(
+                (int(self.keys[i]), int(self.old[i, j]))
+            )
+        return out
+
+    def as_movement_plan(self) -> MovementPlan:
+        """The host ``MovementPlan`` view over the device diff (one source
+        of truth for movement accounting — ``moved_fraction`` here counts
+        transfer pairs, not positional changes)."""
+        r = self.new.shape[1]
+        return MovementPlan.from_diff(
+            np.repeat(self.keys, r),
+            self.old.reshape(-1),
+            self.new.reshape(-1),
+            moved=self.moved.reshape(-1),
+        )
+
+
+# ---------------------------------------------------------------------------
+# the placement control plane
+# ---------------------------------------------------------------------------
+
+
+class StorePlacement:
+    """R-way replicated placement over a ``BatchRouter``'s fleet.
+
+    Wraps (composition, like ``LifecycleManager``) any router exposing the
+    fleet surface — ``spec``, ``domain``, ``_fleet_host``/``_fleet_dev``,
+    ``routing_epoch`` — and adds the placement tier: guarded R-way
+    ``place``, a registry of placed keys with their physical *holders*
+    (which lag the target placement until repair completes), degraded
+    reads, and the one-device-pass migration diff.
+    """
+
+    def __init__(self, router, r: int = 3, *, max_resalt: int | None = None,
+                 strict: bool = False):
+        self.router = router
+        self.spec = PlacementSpec(router=router.spec, r=r, max_resalt=max_resalt)
+        #: strict=True turns an n_alive < r placement into a typed
+        #: PlacementDegradedError instead of a degraded-mode batch
+        self.strict = strict
+        self._keys = np.zeros((0,), np.uint32)
+        self._holders = np.zeros((0, r), np.int64)
+        #: fleet snapshot the registered holders were last synced against —
+        #: the implicit "old" side of plan_migration()
+        self._synced_fleet = self._fleet_snapshot()
+
+    # -- fleet state access --------------------------------------------------
+    @property
+    def r(self) -> int:
+        return self.spec.r
+
+    @property
+    def epoch(self) -> int:
+        return self.router.routing_epoch
+
+    @property
+    def n_alive(self) -> int:
+        return self.router.domain.alive_count
+
+    def _fleet_snapshot(self) -> FleetState:
+        h = self.router._fleet_host
+        return FleetState(
+            h.packed.copy(), h.table.copy(), h.state.copy(), h.capacity
+        )
+
+    def _fleet_dev(self) -> FleetState:
+        """The router's pinned device twin (flushing coalesced events)."""
+        self.router._check_routable()
+        return self.router._fleet_dev
+
+    def _alive_mask(self) -> np.ndarray:
+        """(capacity,) bool — slot id alive right now."""
+        dom = self.router.domain
+        alive = np.zeros(self.router.spec.capacity, bool)
+        alive[: dom.total_count] = True
+        for s in dom.removed:
+            alive[s] = False
+        return alive
+
+    # -- guarded placement ---------------------------------------------------
+    def _guard(self) -> str:
+        n = self.n_alive
+        if n == 0:
+            raise FleetUnavailableError(epoch=self.epoch)
+        if n < self.spec.r:
+            if self.strict:
+                raise PlacementDegradedError(n, self.spec.r, epoch=self.epoch)
+            return MODE_DEGRADED
+        return MODE_NORMAL
+
+    def place_keys(self, keys) -> tuple[jax.Array, jax.Array]:
+        """Raw device placement: ``(replicas (N, r) i32, exhausted (N,)
+        bool)``, no degradation typing (the expert path; ``place`` wraps
+        it).  Routability (``n_alive >= 1``) is still enforced."""
+        fleet = self._fleet_dev()
+        keys_u32 = self.router._coerce_keys(keys)
+        return ops.route_replicas_bulk(keys_u32, fleet, self.spec)
+
+    def place(self, keys) -> PlacedBatch:
+        """Place keys on ``r`` distinct alive shards, typed and epoch-
+        stamped: ``FleetUnavailableError`` at ``n_alive == 0``; fewer alive
+        shards than ``r`` degrades (every key on all ``n_alive`` distinct
+        shards) or raises under ``strict=True``; an exhausted re-salt chain
+        (explicit ``max_resalt`` below the default only) raises
+        ``PlacementExhaustedError``."""
+        mode = self._guard()
+        replicas, exhausted = self.place_keys(keys)
+        exhausted = np.asarray(exhausted)
+        if exhausted.any():
+            raise PlacementExhaustedError(
+                int(exhausted.sum()), self.spec.resolved_max_resalt,
+                epoch=self.epoch,
+            )
+        return PlacedBatch(
+            np.asarray(replicas), self.epoch, mode,
+            min(self.spec.r, self.n_alive),
+        )
+
+    # -- the registered store ------------------------------------------------
+    @property
+    def keys(self) -> np.ndarray:
+        """(M,) u32 registered keys."""
+        return self._keys
+
+    @property
+    def holders(self) -> np.ndarray:
+        """(M, r) int64 physical holders per registered key — where copies
+        actually are, which lags the target placement until repair
+        completes.  ``NO_HOLDER`` marks a column with no copy anywhere."""
+        return self._holders
+
+    def register(self, keys) -> PlacedBatch:
+        """Place new keys and record them as stored: their holders start at
+        the current target placement (writes go to the placement)."""
+        batch = self.place(keys)
+        keys_u32 = np.asarray(
+            np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
+        ).reshape(-1)
+        self._keys = np.concatenate([self._keys, keys_u32])
+        self._holders = np.concatenate(
+            [self._holders, np.asarray(batch.replicas, np.int64)], axis=0
+        )
+        self._synced_fleet = self._fleet_snapshot()
+        return batch
+
+    def reachable_mask(self) -> np.ndarray:
+        """(M, r) bool — holder column is a DISTINCT, alive copy (duplicate
+        holder entries count once; dead/retired/lost columns are False)."""
+        alive = self._alive_mask()
+        h = self._holders
+        valid = (h >= 0) & (h < alive.size)
+        live = np.zeros(h.shape, bool)
+        live[valid] = alive[h[valid]]
+        # first-occurrence filter: a duplicated shard id is one copy
+        first = np.ones(h.shape, bool)
+        for j in range(1, h.shape[1]):
+            for k in range(j):
+                first[:, j] &= h[:, j] != h[:, k]
+        return live & first
+
+    def reachable_counts(self) -> np.ndarray:
+        """(M,) distinct alive copies per registered key — the durability
+        metric the chaos harness asserts on (>= 1 while ``n_alive >= 1``;
+        == min(r, n_alive) once repair quiesces)."""
+        return self.reachable_mask().sum(axis=1).astype(np.int64)
+
+    def read(self, key_index: int) -> tuple[np.ndarray, str]:
+        """Degraded read: the distinct alive holders of one registered key,
+        plus the mode they represent.  ``FleetUnavailableError`` when no
+        copy is reachable (fleet empty, or — durability lost — every
+        holder dead)."""
+        if self.n_alive == 0:
+            raise FleetUnavailableError(epoch=self.epoch)
+        mask = self.reachable_mask()[key_index]
+        found = self._holders[key_index][mask]
+        if found.size == 0:
+            raise FleetUnavailableError(
+                f"key {int(self._keys[key_index])} has no reachable replica "
+                f"(all holders failed)", epoch=self.epoch,
+            )
+        mode = MODE_NORMAL if found.size >= min(self.spec.r, self.n_alive) \
+            else MODE_DEGRADED
+        return found.astype(np.int64), mode
+
+    # -- migration + repair enumeration --------------------------------------
+    def plan_migration(self, old_fleet: FleetState | None = None) -> MigrationPlan:
+        """Diff the registered keys' placement between ``old_fleet`` (default:
+        the snapshot captured at the last register/sync) and the CURRENT
+        fleet — ONE device pass over both placements (DESIGN.md §13)."""
+        old = old_fleet if old_fleet is not None else self._synced_fleet
+        new = self._fleet_dev()
+        keys_u32 = self._keys
+        o, n, moved, _ = ops.placement_diff_bulk(keys_u32, old, new, self.spec)
+        return MigrationPlan(
+            keys=keys_u32,
+            old=np.asarray(o),
+            new=np.asarray(n),
+            moved=np.asarray(moved),
+            epoch=self.epoch,
+        )
+
+    def sync_targets(self) -> list[tuple[int, int, int]]:
+        """Recompute the target placement under the current fleet, realign
+        the holder rows to it, and return the genuinely missing
+        ``(key_index, column, dst_shard)`` repair triples.
+
+        Realignment is pure bookkeeping: a holder whose shard appears in
+        the target row moves to that column; surviving *stale* copies (old
+        shards no longer in the target) keep occupying the to-be-repaired
+        columns so degraded reads still reach them until the repair copy
+        overwrites the slot.  Retired slot ids (``>= n_total``: LIFO
+        scale-down wiped them) are invalidated to ``NO_HOLDER`` first.
+        """
+        if self._keys.size == 0 or self.n_alive == 0:
+            return []
+        replicas, _ = self.place_keys(self._keys)
+        target = np.asarray(replicas, np.int64)
+        total = self.router.domain.total_count
+        h = self._holders
+        h[h >= total] = NO_HOLDER
+        needed: list[tuple[int, int, int]] = []
+        r = self.spec.r
+        for i in range(h.shape[0]):
+            remaining = list(h[i])
+            aligned: list[int | None] = [None] * r
+            for j in range(r):
+                t = int(target[i, j])
+                if t in remaining:
+                    remaining.remove(t)
+                    aligned[j] = t
+            missing = [j for j in range(r) if aligned[j] is None]
+            for j, stale in zip(missing, remaining):
+                aligned[j] = int(stale)
+            for j in missing:
+                needed.append((i, j, int(target[i, j])))
+            h[i] = aligned
+        self._synced_fleet = self._fleet_snapshot()
+        return needed
+
+    def repair_source(self, key_index: int) -> int:
+        """A reachable copy to repair from: the first distinct alive holder
+        of the key, or ``NO_HOLDER`` if durability is already lost."""
+        mask = self.reachable_mask()[key_index]
+        found = self._holders[key_index][mask]
+        return int(found[0]) if found.size else NO_HOLDER
+
+    def complete_repair(self, key_index: int, column: int, dst: int) -> None:
+        """Record one finished repair copy: the column now holds ``dst``
+        (any stale copy previously occupying it is garbage-collected)."""
+        self._holders[key_index, column] = dst

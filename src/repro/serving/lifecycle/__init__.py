@@ -19,6 +19,8 @@ from repro.serving.lifecycle.errors import (
     FleetDegradedError,
     FleetUnavailableError,
     LifecycleError,
+    PlacementDegradedError,
+    PlacementExhaustedError,
 )
 from repro.serving.lifecycle.journal import (
     EVENT_KINDS,
@@ -35,6 +37,8 @@ from repro.serving.lifecycle.manager import (
     MODE_UNAVAILABLE,
     LifecycleConfig,
     LifecycleManager,
+    PlacementRepairer,
+    RepairTask,
     RoutedBatch,
 )
 
@@ -50,6 +54,8 @@ __all__ = [
     "LifecycleError",
     "FleetUnavailableError",
     "FleetDegradedError",
+    "PlacementDegradedError",
+    "PlacementExhaustedError",
     "EVENT_KINDS",
     "MembershipEvent",
     "MembershipJournal",
@@ -59,6 +65,8 @@ __all__ = [
     "restore",
     "LifecycleConfig",
     "LifecycleManager",
+    "PlacementRepairer",
+    "RepairTask",
     "RoutedBatch",
     "MODE_NORMAL",
     "MODE_DEGRADED",

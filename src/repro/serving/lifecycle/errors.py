@@ -7,6 +7,12 @@ answer, not undefined behavior (DESIGN.md §12).
 """
 from __future__ import annotations
 
+#: fleet/placement health modes, ordered by health — shared by the lifecycle
+#: manager's ``RoutedBatch`` and the placement tier's ``PlacedBatch``
+MODE_NORMAL = "normal"
+MODE_DEGRADED = "degraded"
+MODE_UNAVAILABLE = "unavailable"
+
 
 class LifecycleError(RuntimeError):
     """Base class for fleet-lifecycle errors."""
@@ -47,4 +53,48 @@ class FleetDegradedError(LifecycleError):
         )
         self.n_alive = n_alive
         self.floor = floor
+        self.epoch = epoch
+
+
+class PlacementDegradedError(LifecycleError):
+    """Fewer alive shards than the replication factor: full R-way
+    replication is impossible and the placement policy is strict.
+
+    Mirrors ``FleetDegradedError`` one tier up: the default placement
+    policy keeps placing (mode ``"degraded"``, every key on all ``n_alive``
+    distinct shards) and lets the caller decide; ``strict=True`` turns the
+    shortfall into this typed refusal instead.
+    """
+
+    def __init__(self, n_alive: int, r: int, *, epoch: int | None = None):
+        super().__init__(
+            f"placement degraded: {n_alive} alive shard(s) cannot hold "
+            f"{r} distinct replicas"
+        )
+        self.n_alive = n_alive
+        self.r = r
+        self.epoch = epoch
+
+
+class PlacementExhaustedError(LifecycleError):
+    """The bounded re-salt chain ran out of probes before finding a distinct
+    alive shard for some key, even though enough alive shards exist.
+
+    Only reachable with an explicit ``PlacementSpec.max_resalt`` below the
+    distinctness-guaranteeing default — the default bound of ``r`` probes
+    per column makes exhaustion impossible whenever ``n_alive`` exceeds the
+    column index.  Typed so a too-tight bound is a loud error, never a
+    silent duplicate replica.
+    """
+
+    def __init__(
+        self, n_keys: int, max_resalt: int, *, epoch: int | None = None
+    ):
+        super().__init__(
+            f"placement exhausted: {n_keys} key(s) found no distinct alive "
+            f"shard within {max_resalt} re-salt probe(s); raise max_resalt "
+            "(None guarantees distinctness) or accept degraded placement"
+        )
+        self.n_keys = n_keys
+        self.max_resalt = max_resalt
         self.epoch = epoch

@@ -38,6 +38,9 @@ from repro.serving.lifecycle.detector import (
     MonotonicClock,
 )
 from repro.serving.lifecycle.errors import (
+    MODE_DEGRADED,
+    MODE_NORMAL,
+    MODE_UNAVAILABLE,
     FleetDegradedError,
     FleetUnavailableError,
 )
@@ -47,11 +50,6 @@ from repro.serving.lifecycle.journal import (
     replay,
     restore,
 )
-
-#: fleet modes, ordered by health
-MODE_NORMAL = "normal"
-MODE_DEGRADED = "degraded"
-MODE_UNAVAILABLE = "unavailable"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +81,9 @@ class LifecycleManager:
         self.router = router
         self.config = config or LifecycleConfig()
         self.clock = clock or MonotonicClock()
+        #: attached PlacementRepairer (None = no placement tier); every
+        #: journaled membership mutation re-syncs it
+        self._placement: "PlacementRepairer | None" = None
         self.journal = MembershipJournal(router.domain.total_count)
         self.detector = FailureDetector(
             (s for s in range(router.domain.total_count)
@@ -127,8 +128,14 @@ class LifecycleManager:
 
         Call once per dispatch (the serving tier does) — a whole failure
         storm between two batches lands as a single device-state upload.
+        With a placement tier attached, each tick also emits ONE bounded
+        repair batch (the repairer's budget), so re-replication bandwidth
+        is metered by the dispatch cadence.
         """
-        return self.apply(self.detector.poll())
+        events = self.apply(self.detector.poll())
+        if self._placement is not None:
+            self._placement.tick()
+        return events
 
     # -- membership events (all journaled) -----------------------------------
     def apply(self, transitions) -> list:
@@ -147,7 +154,13 @@ class LifecycleManager:
                     raise ValueError(f"unknown transition kind {kind!r}")
                 recorded.append(self.journal.record(kind, slot))
         self._forget_retired()
+        self._sync_placement()
         return recorded
+
+    def _sync_placement(self) -> None:
+        """Membership changed: re-enumerate the placement repair backlog."""
+        if self._placement is not None:
+            self._placement.sync()
 
     def _forget_retired(self) -> None:
         """Drop detector tracks for slots the control plane retired (failing
@@ -164,17 +177,20 @@ class LifecycleManager:
         if slot in self.router.domain.removed:
             self.detector.mark_removed(slot)
         self._forget_retired()
+        self._sync_placement()
 
     def recover(self, slot: int) -> None:
         """Operator-initiated recovery (journaled; detector re-admits)."""
         self.router.recover(slot)
         self.journal.record("recover", slot)
         self.detector.register(slot)
+        self._sync_placement()
 
     def scale_up(self) -> int:
         new = self.router.scale_up()
         self.journal.record("scale_up", new)
         self.detector.register(new)
+        self._sync_placement()
         return new
 
     def scale_down(self) -> int:
@@ -184,6 +200,7 @@ class LifecycleManager:
         for slot in self.detector.slots:
             if slot >= self.router.domain.total_count:
                 self.detector.forget(slot)
+        self._sync_placement()
         return gone
 
     # -- routing (degradation-guarded, epoch-stamped) ------------------------
@@ -268,3 +285,150 @@ class LifecycleManager:
                 raise AssertionError(
                     f"replayed device operand {leaf!r} differs from live"
                 )
+
+
+# ---------------------------------------------------------------------------
+# placement repair scheduling (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairTask:
+    """One executed repair copy: ``key``'s replica column ``column`` was
+    re-materialised on ``dst`` from the reachable copy on ``src``.
+    ``epoch`` is the journal epoch the under-replication was first
+    observed at (the oldest-first scheduling key)."""
+
+    key_index: int
+    key: int
+    column: int
+    dst: int
+    src: int
+    epoch: int
+
+
+class PlacementRepairer:
+    """Bounded-bandwidth repair scheduler: drives a ``StorePlacement``'s
+    holders back to the target placement after membership events.
+
+    Attaches to a ``LifecycleManager`` (same fleet as the store's router):
+    every journaled membership mutation triggers ``sync()`` — one device
+    pass re-enumerating the under-replicated ``(key, column)`` pairs, each
+    stamped with the journal epoch it was FIRST observed at — and each
+    ``tick()`` emits at most ``budget_per_tick`` repair copies, oldest
+    epoch first.  Crash recovery needs no repair journal of its own: the
+    target placement is a pure function of the membership journal's fleet
+    state, so replaying the journal reproduces it bit-exactly
+    (``verify_placement_replay``); the backlog is then re-enumerated from
+    the surviving holders.
+    """
+
+    def __init__(self, store, manager: LifecycleManager,
+                 budget_per_tick: int = 64):
+        if store.router is not manager.router:
+            raise ValueError(
+                "store and manager must wrap the SAME router: the repairer "
+                "schedules against the fleet the journal records"
+            )
+        if budget_per_tick < 1:
+            raise ValueError(
+                f"budget_per_tick must be >= 1, got {budget_per_tick}"
+            )
+        self.store = store
+        self.manager = manager
+        self.budget_per_tick = budget_per_tick
+        #: (key_index, column) -> (dst shard, first-observed epoch)
+        self._pending: dict[tuple[int, int], tuple[int, int]] = {}
+        #: repair copies executed / keys found with no reachable source
+        self.completed = 0
+        self.lost = 0
+        #: per-tick emitted batch sizes — the bounded-bandwidth audit trail
+        self.batches: list[int] = []
+        manager._placement = self
+        self.sync()
+
+    @property
+    def backlog(self) -> int:
+        return len(self._pending)
+
+    # -- enumeration ---------------------------------------------------------
+    def sync(self) -> int:
+        """Re-enumerate under-replication against the CURRENT fleet (one
+        device pass via ``StorePlacement.sync_targets``).  Tasks still
+        needed keep their first-observed epoch — oldest-first ordering
+        survives re-syncs; tasks obsoleted by the new target are dropped.
+        Returns the backlog size.  With ``n_alive == 0`` nothing is
+        schedulable; the backlog is left as-is until capacity returns."""
+        if self.manager.n_alive == 0:
+            return len(self._pending)
+        epoch = self.manager.epoch
+        fresh: dict[tuple[int, int], tuple[int, int]] = {}
+        for ki, col, dst in self.store.sync_targets():
+            prev = self._pending.get((ki, col))
+            if prev is not None and prev[0] == dst:
+                fresh[(ki, col)] = prev
+            else:
+                fresh[(ki, col)] = (dst, epoch)
+        self._pending = fresh
+        return len(fresh)
+
+    # -- bounded execution ---------------------------------------------------
+    def tick(self, budget: int | None = None) -> list[RepairTask]:
+        """Emit ONE repair batch: at most ``budget`` copies (default the
+        configured per-tick budget), oldest first-observed epoch first.
+        Keys whose every copy is unreachable are counted in ``lost`` and
+        re-enumerated at the next membership sync."""
+        if not self._pending:
+            return []
+        budget = self.budget_per_tick if budget is None else budget
+        order = sorted(self._pending.items(), key=lambda kv: (kv[1][1], kv[0]))
+        done: list[RepairTask] = []
+        for (ki, col), (dst, epoch) in order[:budget]:
+            del self._pending[(ki, col)]
+            src = self.store.repair_source(ki)
+            if src < 0:
+                self.lost += 1
+                continue
+            self.store.complete_repair(ki, col, dst)
+            done.append(RepairTask(
+                key_index=ki, key=int(self.store.keys[ki]), column=col,
+                dst=dst, src=src, epoch=epoch,
+            ))
+        self.completed += len(done)
+        if done:
+            self.batches.append(len(done))
+        return done
+
+    def quiesce(self, max_ticks: int = 100_000) -> int:
+        """Drain the backlog in budgeted batches; returns copies executed."""
+        total = 0
+        for _ in range(max_ticks):
+            if not self._pending:
+                break
+            total += len(self.tick())
+        return total
+
+    # -- crash recovery ------------------------------------------------------
+    def verify_placement_replay(self, snapshot=None) -> None:
+        """Assert placement(replayed journal) == live placement bit-exactly:
+        the manager's device-operand replay parity, then the full R-way
+        placement of every registered key recomputed from the rebuilt fleet
+        state.  Raises ``AssertionError`` on mismatch."""
+        import numpy as np
+
+        from repro.core.bulk import FleetState
+        from repro.kernels import ops
+
+        self.manager.verify_replay(snapshot)
+        if self.store.keys.size == 0 or self.manager.n_alive == 0:
+            return
+        rebuilt = self.manager.rebuild_domain(snapshot)
+        fleet = FleetState.pack(rebuilt, self.manager.router.spec.capacity)
+        replayed, _ = ops.route_replicas_bulk(
+            self.store.keys, fleet.device_put(), self.store.spec
+        )
+        live, _ = self.store.place_keys(self.store.keys)
+        if not np.array_equal(np.asarray(replayed), np.asarray(live)):
+            raise AssertionError(
+                "replayed placement differs from live placement"
+            )

@@ -12,7 +12,13 @@ seeded, fully deterministic storyline of fleet trouble driven against a
 * ``crash_recover``  — random membership churn with mid-stream snapshots;
                        the "process" then crashes and is rebuilt from the
                        JSONL journal (genesis AND snapshot+tail);
-* ``mixed``          — everything above interleaved, plus scale up/down.
+* ``mixed``          — everything above interleaved, plus scale up/down;
+* ``replica_loss``   — placement tier: kill up to R-1 holders of the SAME
+                       key between repair quiescence points — the key must
+                       stay readable (degraded) from the survivors and
+                       repair must restore full distinct replication;
+* ``repair_race``    — placement tier: a second failure lands DURING an
+                       in-flight bounded-bandwidth migration/repair.
 
 After (almost) every step the runner routes a fixed probe-key batch through
 the real fused device datapath and checks the paper-level invariants:
@@ -31,6 +37,22 @@ the real fused device datapath and checks the paper-level invariants:
    ``replay(journal) == live state`` bit-exactly (scalar control plane AND
    packed device operands), via ``LifecycleManager.verify_replay``.
 
+The two placement storylines drive a ``StorePlacement`` + ``PlacementRepairer``
+instead of raw routing and check the DURABILITY invariants on top:
+
+6. **no key ever has zero reachable replicas while n_alive >= 1** (every
+   quiescence interval loses at most ``min(r, n_alive) - 1`` replica
+   holders, the construction's tolerance);
+7. **repair convergence** — once the repairer quiesces, every registered
+   key holds exactly ``min(r, n_alive)`` DISTINCT alive replicas;
+8. **bounded bandwidth** — no repair batch ever exceeds the per-tick
+   budget;
+9. **typed degraded reads** — ``n_alive < r`` places in mode
+   ``"degraded"``, reads come only from surviving holders, and
+   ``n_alive == 0`` stays the typed ``FleetUnavailableError``;
+10. **placement replay parity** — the R-way placement recomputed from the
+    replayed journal matches the live placement bit-exactly.
+
 Violations are collected (not raised) so the benchmark can count them; the
 pytest suite asserts the list is empty.
 """
@@ -41,6 +63,7 @@ import dataclasses
 import numpy as np
 
 from repro.placement.elastic import FailureDomain
+from repro.placement.store import StorePlacement
 from repro.serving.batch_router import BatchRouter
 from repro.serving.lifecycle import (
     FleetUnavailableError,
@@ -49,11 +72,17 @@ from repro.serving.lifecycle import (
     LifecycleManager,
     ManualClock,
     MembershipJournal,
+    PlacementRepairer,
     replay,
 )
+from repro.serving.lifecycle.errors import MODE_DEGRADED, MODE_NORMAL
+
+#: placement-tier storylines: driven by a _PlacementRunner (StorePlacement
+#: + PlacementRepairer) instead of a raw-routing _Runner
+PLACEMENT_KINDS = ("replica_loss", "repair_race")
 
 #: scenario storylines (see module docstring)
-KINDS = ("storm", "flap", "cascade", "crash_recover", "mixed")
+KINDS = ("storm", "flap", "cascade", "crash_recover", "mixed") + PLACEMENT_KINDS
 
 #: fixed probe keys routed after every step — small enough to keep 1000s of
 #: scenarios fast, large enough that every replica of a <=32-slot fleet owns
@@ -90,6 +119,8 @@ class ScenarioResult:
     route_attempts: int = 0
     route_unavailable: int = 0
     replay_checks: int = 0
+    #: repair copies executed (placement storylines only)
+    repair_copies: int = 0
     #: ManualClock seconds from each detector "fail" emission to the
     #: matching "recover" emission (detector-driven scenarios only)
     recovery_latencies: list = dataclasses.field(default_factory=list)
@@ -399,12 +430,263 @@ def _run_mixed(r: _Runner) -> None:
     r.check_replay()
 
 
+# -- placement-tier storylines ------------------------------------------------
+
+
+class _PlacementRunner:
+    """Drives an R-way ``StorePlacement`` + ``PlacementRepairer`` through a
+    scenario, checking the durability invariants per step."""
+
+    REPAIR_BUDGET = 8
+
+    def __init__(self, kind: str, engine: str, seed: int, n_initial: int,
+                 r: int):
+        self.rng = np.random.default_rng(seed)
+        self.clock = ManualClock()
+        self.router = BatchRouter(n_initial, engine=engine)
+        self.mgr = LifecycleManager(
+            self.router, LifecycleConfig(min_alive_floor=1), clock=self.clock
+        )
+        self.store = StorePlacement(self.router, r=r)
+        self.store.register(PROBE_KEYS)
+        self.repairer = PlacementRepairer(
+            self.store, self.mgr, budget_per_tick=self.REPAIR_BUDGET
+        )
+        self.res = ScenarioResult(kind=kind, engine=engine, seed=seed)
+        self.check_durability()
+
+    # -- state helpers ------------------------------------------------------
+    @property
+    def total(self) -> int:
+        return self.router.domain.total_count
+
+    @property
+    def removed(self) -> frozenset:
+        return self.router.domain.removed
+
+    @property
+    def n_alive(self) -> int:
+        return self.router.domain.alive_count
+
+    @property
+    def alive_slots(self) -> list:
+        rm = self.removed
+        return [s for s in range(self.total) if s not in rm]
+
+    def _flag(self, msg: str) -> None:
+        self.res.violations.append(
+            f"[{self.res.kind}/{self.res.engine}/seed={self.res.seed}] {msg}"
+        )
+
+    # -- invariants ----------------------------------------------------------
+    def check_durability(self) -> None:
+        """The placement tier's core invariant battery: while
+        ``n_alive >= 1`` no registered key drops to zero reachable
+        replicas, placements are typed/epoch-stamped with the right
+        degradation mode, and every placed replica row is
+        ``min(r, n_alive)``-distinct and alive-only."""
+        self.res.route_attempts += 1
+        n_alive = self.n_alive
+        if n_alive == 0:
+            self.res.route_unavailable += 1
+            try:
+                self.store.place(PROBE_KEYS[:8])
+                self._flag("place succeeded with n_alive == 0")
+            except FleetUnavailableError:
+                pass
+            return
+        counts = self.store.reachable_counts()
+        if (counts < 1).any():
+            self._flag(
+                f"durability lost: {int((counts < 1).sum())} key(s) with "
+                f"zero reachable replicas at n_alive={n_alive}"
+            )
+        n_eff = min(self.store.r, n_alive)
+        if (counts > n_eff).any():
+            self._flag(f"reachable count above min(r, n_alive)={n_eff}")
+        try:
+            batch = self.store.place(PROBE_KEYS[:16])
+        except FleetUnavailableError:
+            self.res.route_unavailable += 1
+            self._flag(f"FleetUnavailableError with n_alive={n_alive}")
+            return
+        expect = MODE_DEGRADED if n_alive < self.store.r else MODE_NORMAL
+        if batch.mode != expect:
+            self._flag(
+                f"mode {batch.mode!r} != {expect!r} at n_alive={n_alive}, "
+                f"r={self.store.r}"
+            )
+        if batch.epoch != self.mgr.epoch:
+            self._flag(
+                f"placement epoch {batch.epoch} != journal epoch "
+                f"{self.mgr.epoch}"
+            )
+        reps = np.asarray(batch.replicas)
+        dead = set(np.unique(reps).tolist()) - set(self.alive_slots)
+        if dead:
+            self._flag(f"placed on removed replica(s) {sorted(dead)}")
+        distinct = np.array([len(set(row.tolist())) for row in reps])
+        if (distinct != n_eff).any():
+            self._flag(
+                f"placement rows not {n_eff}-distinct at n_alive={n_alive}"
+            )
+
+    def check_quiesced(self) -> None:
+        """Post-repair: every registered key back at full (possibly
+        degraded-by-fleet-size) distinct replication."""
+        if self.n_alive == 0:
+            return
+        n_eff = min(self.store.r, self.n_alive)
+        counts = self.store.reachable_counts()
+        if (counts != n_eff).any():
+            self._flag(
+                f"post-repair: {int((counts != n_eff).sum())} key(s) not at "
+                f"{n_eff} distinct replicas"
+            )
+        if self.repairer.backlog:
+            self._flag(f"quiesce left backlog {self.repairer.backlog}")
+
+    def check_replay(self) -> None:
+        self.res.replay_checks += 1
+        try:
+            self.repairer.verify_placement_replay()
+            self.repairer.verify_placement_replay(self.mgr.snapshot())
+        except AssertionError as e:
+            self._flag(f"placement replay parity: {e}")
+
+    # -- repair bandwidth ----------------------------------------------------
+    def tick_repair(self) -> list:
+        done = self.repairer.tick()
+        if len(done) > self.repairer.budget_per_tick:
+            self._flag(
+                f"repair batch {len(done)} exceeds budget "
+                f"{self.repairer.budget_per_tick}"
+            )
+        self.res.repair_copies += len(done)
+        return done
+
+    def quiesce(self) -> None:
+        lost0 = self.repairer.lost
+        for _ in range(10_000):
+            if not self.repairer.backlog:
+                break
+            self.tick_repair()
+        if self.repairer.backlog:
+            self._flag(f"repair backlog failed to drain ({self.repairer.backlog})")
+        if self.repairer.lost > lost0 and self.n_alive >= 1:
+            self._flag(
+                f"{self.repairer.lost - lost0} repair task(s) had no "
+                f"reachable source with n_alive={self.n_alive}"
+            )
+        self.check_quiesced()
+
+    # -- event vocabulary ----------------------------------------------------
+    def fail(self, slot: int) -> None:
+        self.mgr.fail(slot)  # journaled; the manager re-syncs the repairer
+        self.res.events += 1
+        self.check_durability()
+
+    def storm(self, transitions) -> None:
+        self.mgr.apply(transitions)
+        self.res.events += len(transitions)
+        self.check_durability()
+
+    def recover_all(self) -> None:
+        back = sorted(self.removed)
+        if back:
+            self.storm([
+                ("recover", s) for s in self.rng.permutation(back).tolist()
+            ])
+
+    def maybe_scale_up(self) -> bool:
+        if self.total >= self.router.spec.capacity:
+            return False
+        self.mgr.scale_up()
+        self.res.events += 1
+        self.check_durability()
+        return True
+
+    def pick_alive(self) -> int | None:
+        alive = self.alive_slots
+        return int(self.rng.choice(alive)) if alive else None
+
+
+def _run_replica_loss(p: _PlacementRunner) -> None:
+    """Kill up to r-1 holders of the SAME key between quiescence points:
+    the key stays readable (degraded) from the survivors — never from a
+    victim — and budgeted repair restores min(r, n_alive)-way distinct
+    replication for every key."""
+    for _round in range(4):
+        if p.n_alive < 2:
+            break
+        ki = int(p.rng.integers(0, N_PROBE))
+        holders, _ = p.store.read(ki)
+        kmax = min(p.store.r - 1, int(holders.size), p.n_alive - 1)
+        if kmax < 1:
+            break
+        k = int(p.rng.integers(1, kmax + 1))
+        victims = [int(s) for s in p.rng.choice(holders, size=k, replace=False)]
+        p.storm([("fail", s) for s in victims])
+        try:
+            found, _mode = p.store.read(ki)
+        except FleetUnavailableError:
+            p._flag(
+                f"key index {ki} unreadable after {k} of {p.store.r} "
+                f"replica holders failed (n_alive={p.n_alive})"
+            )
+        else:
+            hit = set(found.tolist()) & set(victims)
+            if hit:
+                p._flag(f"degraded read returned failed holder(s) {sorted(hit)}")
+        p.quiesce()
+        p.recover_all()
+        p.quiesce()
+    p.check_replay()
+
+
+def _run_repair_race(p: _PlacementRunner) -> None:
+    """A membership change starts a migration; after a few budgeted repair
+    ticks — mid-flight, backlog still pending — a SECOND failure lands.
+    Total distinct failures per quiescence interval stay <= r-1 (the
+    construction's tolerance), so durability must hold through the race
+    and repair must still converge."""
+    for _round in range(3):
+        budget = min(p.store.r, p.n_alive) - 1  # kills tolerable this round
+        if budget < 1 or p.n_alive < 2:
+            break
+        grew = False
+        if p.rng.random() < 0.5:
+            grew = p.maybe_scale_up()
+        if not grew:
+            victim = p.pick_alive()
+            if victim is None:
+                break
+            p.fail(victim)
+            budget -= 1
+        # in-flight: a few bounded repair batches, NOT a full quiesce
+        for _ in range(int(p.rng.integers(1, 4))):
+            p.tick_repair()
+        # the race: another failure DURING the pending migration
+        if budget >= 1 and p.n_alive >= 2:
+            victim = p.pick_alive()
+            if victim is not None:
+                p.fail(victim)
+                for _ in range(int(p.rng.integers(0, 3))):
+                    p.tick_repair()
+        p.quiesce()
+        p.recover_all()
+        p.quiesce()
+    p.check_replay()
+
+
 _STORYLINES = {
     "storm": _run_storm,
     "flap": _run_flap,
     "cascade": _run_cascade,
     "crash_recover": _run_crash_recover,
     "mixed": _run_mixed,
+    "replica_loss": _run_replica_loss,
+    "repair_race": _run_repair_race,
 }
 
 
@@ -414,6 +696,13 @@ def run_scenario(kind: str, engine: str, seed: int) -> ScenarioResult:
         raise ValueError(f"unknown scenario kind {kind!r}; expected {KINDS}")
     rng = np.random.default_rng(seed)
     n_initial = int(rng.integers(4, 17))
+    if kind in PLACEMENT_KINDS:
+        rep = 3 if kind == "repair_race" else 2 + seed % 2
+        runner = _PlacementRunner(
+            kind, engine, seed, max(n_initial, rep + 2), rep
+        )
+        _STORYLINES[kind](runner)
+        return runner.res
     r = _Runner(kind, engine, seed, n_initial)
     _STORYLINES[kind](r)
     return r.res
