@@ -44,6 +44,13 @@ the fused datapath:
   durability, repair convergence — a violation is a correctness bug, not a
   perf regression), overall availability has a floor, and flap scenarios
   must have produced recovery-latency samples.
+* **serving record** (``--serving-current``, from ``bench_serving``): the
+  streaming tier's SLO contract — >= 3 load points with one above
+  capacity, ZERO shed at/below capacity, served p99 under the
+  ``slo + max_wait`` invariant cap (no request misses its deadline by
+  more than one batch window), and shed fraction monotone in offered
+  load.  All hard gates: each is a correctness property of the admission
+  /batching design, not a machine-speed number.
 * **placement record** (``--placement-current``, from ``bench_placement``):
   every measured migration transition's moved-pair fraction must sit
   within the theoretical consistent-hashing bound (``within_bound`` — a
@@ -304,6 +311,72 @@ def check_placement(plc: dict) -> list[str]:
     return failures
 
 
+#: tiny slack on the "monotone shed" comparison: two below-capacity points
+#: both at exactly 0 must not fail on float fuzz
+SHED_MONOTONE_TOL = 1e-9
+
+
+def check_serving(serv: dict) -> list[str]:
+    """Gate a ``bench_serving`` record: the streaming tier's SLO contract.
+
+    * every engine reports >= 3 load points with >= 1 above capacity;
+    * shed fraction is exactly 0 at every point at or below capacity;
+    * p99 served latency respects the invariant cap ``slo + max_wait`` (an
+      admitted-and-served request misses its deadline by at most one batch
+      window — breaking this is a correctness bug, not a perf regression);
+    * shed fraction is monotone non-decreasing in offered load.
+    """
+    failures: list[str] = []
+    window = int(serv["max_wait_us"])
+    for engine, rec in serv.get("per_engine", {}).items():
+        points = rec.get("points", [])
+        slo = int(rec["slo_us"])
+        cap = slo + window
+        print(
+            f"serving[{engine}]: {len(points)} load points, slo {slo}us, "
+            f"p99 cap {cap}us, "
+            + "; ".join(
+                f"x{p['load_mult']:g}: shed {p['shed_fraction']:.3f} "
+                f"p99 {p['p99_us'] or 0:.0f}us"
+                for p in points
+            )
+        )
+        if len(points) < 3:
+            failures.append(
+                f"serving[{engine}] has {len(points)} load points; need >= 3"
+            )
+        if not any(p["above_capacity"] for p in points):
+            failures.append(
+                f"serving[{engine}] has no above-capacity load point"
+            )
+        prev_shed = 0.0
+        for p in sorted(points, key=lambda q: q["offered_rps"]):
+            tag = f"serving[{engine}] x{p['load_mult']:g}"
+            if not p["above_capacity"] and p["shed_fraction"] > 0:
+                failures.append(
+                    f"{tag} sheds {p['shed_fraction']:.4f} at/below capacity"
+                )
+            if p["p99_us"] is not None and p["p99_us"] > cap:
+                failures.append(
+                    f"{tag} p99 {p['p99_us']:.0f}us breaks the slo+window "
+                    f"cap {cap}us (deadline-miss bound violated)"
+                )
+            if p["deadline_miss_max_us"] > window:
+                failures.append(
+                    f"{tag} served a request {p['deadline_miss_max_us']}us "
+                    f"past deadline (> one {window}us batch window)"
+                )
+            if p["shed_fraction"] + SHED_MONOTONE_TOL < prev_shed:
+                failures.append(
+                    f"{tag} shed fraction {p['shed_fraction']:.4f} below the "
+                    f"previous (lower) load's {prev_shed:.4f}: not monotone"
+                )
+            prev_shed = max(prev_shed, p["shed_fraction"])
+    if not serv.get("per_engine"):
+        failures.append("serving record has no per_engine section")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="benchmarks/out/BENCH_router_smoke.json")
@@ -320,6 +393,12 @@ def main(argv: list[str] | None = None) -> int:
              "BENCH_placement_smoke.json in CI, BENCH_placement.json for "
              "full runs)",
     )
+    ap.add_argument(
+        "--serving-current", default=None,
+        help="bench_serving record to gate (e.g. benchmarks/out/"
+             "BENCH_serving_smoke.json in CI, BENCH_serving.json for "
+             "full runs)",
+    )
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -334,6 +413,9 @@ def main(argv: list[str] | None = None) -> int:
     if args.placement_current:
         with open(args.placement_current) as f:
             failures += check_placement(json.load(f))
+    if args.serving_current:
+        with open(args.serving_current) as f:
+            failures += check_serving(json.load(f))
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

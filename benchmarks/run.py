@@ -25,6 +25,7 @@ def main() -> None:
         bench_placement,
         bench_roofline,
         bench_router,
+        bench_serving,
         bench_theory,
     )
 
@@ -38,6 +39,7 @@ def main() -> None:
         ("session routing (scalar vs batched)", bench_router),
         ("elastic placement", bench_elastic),
         ("replicated store placement (R-way tier)", bench_placement),
+        ("streaming serving tier (micro-batch + admission)", bench_serving),
         ("roofline table (from dry-run)", bench_roofline),
     ]
     failures = 0

@@ -467,6 +467,68 @@ def certify_lifecycle_route(
     return certify_callable(engine_name, "route/lifecycle", tracer, contract=contract)
 
 
+def certify_streaming_route(
+    engine_name: str, contract: Optional[EngineContract] = None
+) -> TargetReport:
+    """Certify the streaming tier's dispatch EXACTLY as a closed
+    micro-batch runs it (DESIGN.md §14).
+
+    The ``serving/streaming`` front end wraps the route in admission
+    control, micro-batching, deadline shedding, circuit breakers and a
+    placement-repair tick — ALL host-side control plane.  This target
+    assembles the full streaming stack (manager + placement store +
+    repairer + front end), drives real micro-batches through it into a
+    storm state with a non-empty repair backlog, then traces the device
+    computation one more closed batch would dispatch: it must be
+    while-free, callback-free and transfer-free just like the bare engine
+    — the whole streaming apparatus adds NOTHING to the device hot path.
+    """
+    contract = contract or contract_for(engine_name)
+    keys = np.zeros((contract.batch,), np.uint32)
+
+    def tracer(om):
+        from repro.core.bulk import RouterSpec
+        from repro.placement.store import StorePlacement
+        from repro.serving.batch_router import BatchRouter
+        from repro.serving.lifecycle import LifecycleManager, PlacementRepairer
+        from repro.serving.streaming import (
+            StreamConfig,
+            StreamingFrontEnd,
+            StreamRequest,
+            VirtualClockUs,
+        )
+
+        spec = RouterSpec(engine=engine_name, capacity=contract.capacity, omega=om)
+        router = BatchRouter(8, spec)
+        mgr = LifecycleManager(router)
+        store = StorePlacement(router, r=3)
+        store.register(np.arange(64, dtype=np.uint32) * 2654435761)
+        PlacementRepairer(store, mgr, budget_per_tick=4)
+        clock = VirtualClockUs()
+        fe = StreamingFrontEnd(
+            mgr,
+            store=store,
+            config=StreamConfig(max_batch=8, service_bound_us=10_000),
+            clock=clock,
+        )
+        # a real storm plus live streamed batches: the repairer backlog is
+        # non-empty and the breaker board is armed — the state an in-flight
+        # stream actually dispatches against
+        mgr.apply([("fail", 1), ("fail", 3), ("recover", 1), ("fail", 5)])
+        for i in range(8):
+            fe.submit(
+                StreamRequest(key=i * 40_503, deadline_us=clock.now_us() + 50_000)
+            )
+        clock.advance_us(2_000)
+        fe.pump()
+        fe.drain()
+        return jax.make_jaxpr(mgr.router.route_keys)(keys)
+
+    return certify_callable(
+        engine_name, "serving/streaming", tracer, contract=contract
+    )
+
+
 #: the placement pass certifies affinity in the replication factor R, not ω
 #: (ω is a fixed inner parameter of the one fused-route call): ``omega``
 #: here is the BASE R the tracer varies — R, R+1, R+2
@@ -528,6 +590,7 @@ def certify_all(
         report.targets.extend(certify_engine(name))
         report.targets.append(certify_lifecycle_route(name))
         report.targets.append(certify_placement_route(name))
+        report.targets.append(certify_streaming_route(name))
     if include_chain_baseline:
         report.targets.append(certify_chain_baseline())
     return report

@@ -141,15 +141,25 @@ class ServingTier:
                 results[g.session_id] = row[: g.n_new]
         return results
 
-    # fleet events delegate to the router; replicas list stays (dead ones
-    # idle) — except failing the LAST slot, which the control plane treats
-    # as a true LIFO retirement that shrinks the slot space
+    # fleet events delegate through the lifecycle manager when one is
+    # attached (journaled, detector-aligned, placement-synced — a tier-level
+    # fail that bypassed the manager would never enter the journal or seed
+    # the repairer's backlog) and fall back to the raw router otherwise.
+    # Replicas list stays (dead ones idle) — except failing the LAST slot,
+    # which the control plane treats as a true LIFO retirement that shrinks
+    # the slot space.
     def fail(self, replica: int):
-        self.router.fail(replica)
+        if self.lifecycle is not None:
+            self.lifecycle.fail(replica)
+        else:
+            self.router.fail(replica)
         del self.replicas[self.router.domain.total_count:]
 
     def recover(self, replica: int):
-        self.router.recover(replica)
+        if self.lifecycle is not None:
+            self.lifecycle.recover(replica)
+        else:
+            self.router.recover(replica)
 
     def scale_up(self, params) -> int:
         """Append a replica serving ``params``; only movers re-prefill."""
@@ -159,13 +169,19 @@ class ServingTier:
                 f"router slot space ({self.router.domain.total_count}) — "
                 "was the router mutated directly instead of via the tier?"
             )
-        new = self.router.scale_up()
+        if self.lifecycle is not None:
+            new = self.lifecycle.scale_up()
+        else:
+            new = self.router.scale_up()
         self.replicas.append(Replica(self.cfg, params, self.max_len))
         return new
 
     def scale_down(self) -> int:
         """Retire the last replica (LIFO, per the paper's operating model)."""
-        gone = self.router.scale_down()
+        if self.lifecycle is not None:
+            gone = self.lifecycle.scale_down()
+        else:
+            gone = self.router.scale_down()
         # the router may garbage-collect failed tombstones off the end too
         del self.replicas[self.router.domain.total_count:]
         return gone

@@ -16,6 +16,12 @@ from repro.serving.lifecycle.detector import (
     MonotonicClock,
 )
 from repro.serving.lifecycle.errors import (
+    SHED_INFEASIBLE,
+    SHED_LATE,
+    SHED_PAST_DEADLINE,
+    SHED_RATE_LIMITED,
+    AdmissionRejectedError,
+    ClockWentBackwardsError,
     FleetDegradedError,
     FleetUnavailableError,
     LifecycleError,
@@ -52,6 +58,12 @@ __all__ = [
     "ManualClock",
     "MonotonicClock",
     "LifecycleError",
+    "AdmissionRejectedError",
+    "ClockWentBackwardsError",
+    "SHED_PAST_DEADLINE",
+    "SHED_INFEASIBLE",
+    "SHED_RATE_LIMITED",
+    "SHED_LATE",
     "FleetUnavailableError",
     "FleetDegradedError",
     "PlacementDegradedError",

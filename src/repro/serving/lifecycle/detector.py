@@ -31,6 +31,8 @@ import dataclasses
 import time
 from typing import Iterable
 
+from .errors import ClockWentBackwardsError
+
 # -- replica lifecycle states (DESIGN.md §12 state machine) -----------------
 ALIVE = "alive"
 SUSPECT = "suspect"
@@ -116,15 +118,25 @@ class FailureDetector:
     ):
         self.config = config or HeartbeatConfig()
         self.clock = clock or MonotonicClock()
-        now = self.clock.now()
+        self._last_now = self.clock.now()
         self._tracks: dict[int, _Track] = {
-            int(s): _Track(last_beat=now) for s in slots
+            int(s): _Track(last_beat=self._last_now) for s in slots
         }
+
+    def _now(self) -> float:
+        """Read the clock, refusing any regression (deadline math is only
+        sound over monotone time — a backwards step would silently shrink
+        every silence window)."""
+        now = self.clock.now()
+        if now < self._last_now:
+            raise ClockWentBackwardsError(now=now, last=self._last_now)
+        self._last_now = now
+        return now
 
     # -- membership of the *detector* (scale events) ------------------------
     def register(self, slot: int) -> None:
         """A new replica joined (scale-up): tracked alive from now."""
-        self._tracks[int(slot)] = _Track(last_beat=self.clock.now())
+        self._tracks[int(slot)] = _Track(last_beat=self._now())
 
     def forget(self, slot: int) -> None:
         """A replica left the slot space (scale-down)."""
@@ -151,7 +163,7 @@ class FailureDetector:
     def heartbeat(self, slot: int) -> None:
         """One beat from ``slot``.  Never emits events (see ``poll``)."""
         tr = self._tracks[int(slot)]
-        now = self.clock.now()
+        now = self._now()
         if tr.state == SUSPECT:
             # hysteresis: a suspect that beats again was never declared
             # failed, so nothing downstream ever heard about it
@@ -174,7 +186,7 @@ class FailureDetector:
         order — the lifecycle manager applies them to the router under one
         coalesced device update.
         """
-        now = self.clock.now()
+        now = self._now()
         out: list[tuple[str, int]] = []
         for slot in sorted(self._tracks):
             tr = self._tracks[slot]

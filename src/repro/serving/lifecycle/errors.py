@@ -76,6 +76,62 @@ class PlacementDegradedError(LifecycleError):
         self.epoch = epoch
 
 
+class ClockWentBackwardsError(LifecycleError):
+    """The failure detector's clock returned a timestamp earlier than one it
+    already handed out.
+
+    Deadline detection is only sound over a monotone time source: a regressed
+    ``now`` silently shrinks every silence window and can un-expire suspect
+    timers.  Rather than corrupt the state machine, the detector refuses the
+    reading — fix the clock (or the test's ``ManualClock`` choreography).
+    """
+
+    def __init__(self, now: float, last: float):
+        super().__init__(
+            f"clock went backwards: now={now} < last observed {last}; "
+            "failure-detector deadlines require a monotone clock"
+        )
+        self.now = now
+        self.last = last
+
+
+#: admission-rejection reason codes (``AdmissionRejectedError.reason``)
+SHED_PAST_DEADLINE = "past_deadline"
+SHED_INFEASIBLE = "deadline_infeasible"
+SHED_RATE_LIMITED = "rate_limited"
+SHED_LATE = "late_at_batch_close"
+
+
+class AdmissionRejectedError(LifecycleError):
+    """A streaming request was shed at admission (or batch close) instead of
+    being served past its deadline.
+
+    Typed so callers can distinguish load shedding from infrastructure
+    failure: a shed request is the *admission controller working*, carrying
+    the machine-readable ``reason`` (one of the ``SHED_*`` codes) and the
+    tenant it was charged to.
+    """
+
+    def __init__(
+        self,
+        reason: str,
+        *,
+        tenant: str | None = None,
+        deadline_us: int | None = None,
+        now_us: int | None = None,
+    ):
+        msg = f"request shed: {reason}"
+        if tenant is not None:
+            msg += f" (tenant {tenant!r})"
+        if deadline_us is not None and now_us is not None:
+            msg += f" [deadline_us={deadline_us}, now_us={now_us}]"
+        super().__init__(msg)
+        self.reason = reason
+        self.tenant = tenant
+        self.deadline_us = deadline_us
+        self.now_us = now_us
+
+
 class PlacementExhaustedError(LifecycleError):
     """The bounded re-salt chain ran out of probes before finding a distinct
     alive shard for some key, even though enough alive shards exist.

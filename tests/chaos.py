@@ -75,14 +75,35 @@ from repro.serving.lifecycle import (
     PlacementRepairer,
     replay,
 )
-from repro.serving.lifecycle.errors import MODE_DEGRADED, MODE_NORMAL
+from repro.serving.lifecycle.detector import REMOVED, SUSPECT
+from repro.serving.lifecycle.errors import (
+    MODE_DEGRADED,
+    MODE_NORMAL,
+    AdmissionRejectedError,
+)
+from repro.serving.streaming import (
+    BreakerConfig,
+    LifecycleDispatch,
+    StreamConfig,
+    StreamingFrontEnd,
+    StreamRequest,
+    VirtualClockUs,
+)
 
 #: placement-tier storylines: driven by a _PlacementRunner (StorePlacement
 #: + PlacementRepairer) instead of a raw-routing _Runner
 PLACEMENT_KINDS = ("replica_loss", "repair_race")
 
+#: streaming-tier storylines: driven by a _StreamingRunner (StreamingFrontEnd
+#: over lifecycle + placement, virtual-µs clock) — see module docstring
+STREAMING_KINDS = ("overload", "latency_spike")
+
 #: scenario storylines (see module docstring)
-KINDS = ("storm", "flap", "cascade", "crash_recover", "mixed") + PLACEMENT_KINDS
+KINDS = (
+    ("storm", "flap", "cascade", "crash_recover", "mixed")
+    + PLACEMENT_KINDS
+    + STREAMING_KINDS
+)
 
 #: fixed probe keys routed after every step — small enough to keep 1000s of
 #: scenarios fast, large enough that every replica of a <=32-slot fleet owns
@@ -679,6 +700,310 @@ def _run_repair_race(p: _PlacementRunner) -> None:
     p.check_replay()
 
 
+# -- streaming-tier storylines ------------------------------------------------
+
+
+class _StreamingRunner:
+    """Drives a ``StreamingFrontEnd`` (admission + micro-batch + hedged
+    reads + breakers) over a lifecycle-wrapped router and an R-way
+    placement, on ONE virtual-µs timeline, checking the SLO invariants:
+
+    11. **bounded deadline miss** — no admitted-and-served request completes
+        more than one batch window (``max_wait_us``) past its deadline;
+    12. **monotone shedding** — shed fraction never *decreases* as offered
+        load steps up (overload ramp);
+    13. **holder-only hedging** — a (possibly hedged) read returns a shard
+        that actually holds the key, never a non-holder.
+    """
+
+    #: detector thresholds compressed to a sub-second virtual timescale so
+    #: suspect/fail/readmit transitions land inside a short storyline
+    HB = HeartbeatConfig(
+        heartbeat_interval=0.05,
+        suspect_after=0.15,
+        fail_after=0.35,
+        readmit_after=0.2,
+    )
+    BASE_SERVICE_US = 800
+    SERVICE_BOUND_US = 2_000
+    MAX_BATCH = 16
+    MAX_WAIT_US = 1_000
+
+    def __init__(self, kind: str, engine: str, seed: int, n_initial: int):
+        self.rng = np.random.default_rng(seed)
+        self.clock = VirtualClockUs()
+        self.router = BatchRouter(n_initial, engine=engine)
+        self.mgr = LifecycleManager(
+            self.router,
+            LifecycleConfig(min_alive_floor=1, heartbeat=self.HB),
+            clock=self.clock.seconds_view(),
+        )
+        self.store = StorePlacement(self.router, r=min(3, n_initial - 1))
+        self.store.register(PROBE_KEYS)
+        self.repairer = PlacementRepairer(
+            self.store, self.mgr, budget_per_tick=64
+        )
+        self.res = ScenarioResult(kind=kind, engine=engine, seed=seed)
+        #: service multiplier scripted by the storyline (latency spikes)
+        self.spike_mult = 1.0
+
+    def _flag(self, msg: str) -> None:
+        self.res.violations.append(
+            f"[{self.res.kind}/{self.res.engine}/seed={self.res.seed}] {msg}"
+        )
+
+    # -- state helpers ------------------------------------------------------
+    @property
+    def n_alive(self) -> int:
+        return self.router.domain.alive_count
+
+    @property
+    def alive_slots(self) -> list:
+        rm = self.router.domain.removed
+        return [s for s in range(self.router.domain.total_count) if s not in rm]
+
+    # -- injected transports -------------------------------------------------
+    def _service_model(self, _n: int) -> int:
+        # spikes never exceed the declared bound: the bound is the SLO
+        # capacity statement the miss guarantee reasons against
+        return min(
+            int(self.BASE_SERVICE_US * self.spike_mult), self.SERVICE_BOUND_US
+        )
+
+    def _probe(self, shard: int) -> int:
+        try:
+            slow = self.mgr.detector.state_of(int(shard)) == SUSPECT
+        except KeyError:
+            slow = False
+        return 900 if slow else 120
+
+    def make_frontend(self, rate_per_s=None) -> StreamingFrontEnd:
+        def on_events(events):
+            self.res.events += len(events)
+
+        return StreamingFrontEnd(
+            self.mgr,
+            store=self.store,
+            config=StreamConfig(
+                max_batch=self.MAX_BATCH,
+                max_wait_us=self.MAX_WAIT_US,
+                service_bound_us=self.SERVICE_BOUND_US,
+                hedge_after_us=300,
+                tenant_rate_per_s=rate_per_s,
+            ),
+            clock=self.clock,
+            breaker_config=BreakerConfig(
+                trip_after=3, window_us=30_000_000, cooldown_us=2_000_000
+            ),
+            dispatch_fn=LifecycleDispatch(self.mgr, on_events=on_events),
+            service_model=self._service_model,
+            probe=self._probe,
+        )
+
+    # -- invariant checks -----------------------------------------------------
+    def _consume(self, results) -> int:
+        for r in results:
+            self.res.route_attempts += 1
+            if r.deadline_miss_us > self.MAX_WAIT_US:
+                self._flag(
+                    f"served request missed its deadline by "
+                    f"{r.deadline_miss_us}us > one batch window "
+                    f"({self.MAX_WAIT_US}us)"
+                )
+        return len(results)
+
+    def drive(
+        self, fe: StreamingFrontEnd, n_requests: int, gap_us: int,
+        slo_us: int, jitter: float = 0.2,
+    ) -> tuple[int, int]:
+        """Open-loop arrivals at ~1/gap_us req/µs; returns (served, shed)."""
+        served = shed = 0
+        for _ in range(n_requests):
+            req = StreamRequest(
+                key=int(self.rng.integers(0, 1 << 32)),
+                deadline_us=self.clock.now_us() + slo_us,
+                tenant=f"t{int(self.rng.integers(0, 4))}",
+            )
+            try:
+                fe.submit(req)
+            except AdmissionRejectedError:
+                shed += 1
+            lo, hi = (1 - jitter) * gap_us, (1 + jitter) * gap_us
+            self.clock.advance_us(max(1, int(self.rng.uniform(lo, hi))))
+            served += self._consume(fe.pump())
+        served += self._consume(fe.drain())
+        return served, shed
+
+    def read_probe(self, fe: StreamingFrontEnd, ki: int):
+        try:
+            out = fe.read(ki)
+        except FleetUnavailableError:
+            if self.n_alive > 0 and self.store.reachable_counts()[ki] > 0:
+                self._flag(
+                    f"read of key index {ki} unavailable with reachable "
+                    f"copies at n_alive={self.n_alive}"
+                )
+            return None
+        if out.shard not in out.holders:
+            self._flag(
+                f"hedged read returned non-holder {out.shard} "
+                f"(holders {list(out.holders)})"
+            )
+        if out.shard not in self.alive_slots:
+            self._flag(f"hedged read returned dead shard {out.shard}")
+        return out
+
+    def keys_with_primary(self, shard: int, limit: int = 8) -> list:
+        """Registered key indices whose FIRST reachable holder is ``shard``
+        (the reads that elect it primary)."""
+        mask = self.store.reachable_mask()
+        out = []
+        for ki in range(mask.shape[0]):
+            cols = np.flatnonzero(mask[ki])
+            if cols.size and int(self.store.holders[ki, cols[0]]) == shard:
+                out.append(ki)
+                if len(out) >= limit:
+                    break
+        return out
+
+    def quiesce(self) -> None:
+        for _ in range(10_000):
+            if not self.repairer.backlog:
+                break
+            self.repairer.tick()
+        n_eff = min(self.store.r, self.n_alive)
+        counts = self.store.reachable_counts()
+        if (counts != n_eff).any():
+            self._flag(
+                f"post-quiesce: {int((counts != n_eff).sum())} key(s) not "
+                f"at {n_eff} distinct replicas"
+            )
+
+    def check_replay(self) -> None:
+        self.res.replay_checks += 1
+        try:
+            self.mgr.verify_replay()
+            self.repairer.verify_placement_replay()
+        except AssertionError as e:
+            self._flag(f"replay parity: {e}")
+
+
+def _run_overload(s: _StreamingRunner) -> None:
+    """Offered load ramps from half capacity to 4x: below capacity nothing
+    sheds, above it the shed fraction grows monotonically while every
+    SERVED request still lands within one batch window of its deadline."""
+    capacity_gap = s.BASE_SERVICE_US / s.MAX_BATCH  # µs/request at capacity
+    fractions = []
+    for mult in (0.5, 1.0, 2.0, 4.0):
+        fe = s.make_frontend()
+        gap = max(1, int(capacity_gap / mult))
+        served, shed = s.drive(fe, n_requests=240, gap_us=gap, slo_us=4_000)
+        total = served + shed
+        fractions.append(shed / total if total else 0.0)
+        for _ in range(6):
+            s.read_probe(fe, int(s.rng.integers(0, N_PROBE)))
+    if fractions[0] > 0.02:
+        s._flag(f"shed fraction {fractions[0]:.3f} at half capacity")
+    for a, b in zip(fractions, fractions[1:]):
+        if b < a - 0.02:
+            s._flag(
+                f"shed fraction not monotone in offered load: {fractions}"
+            )
+            break
+    # membership churn mid-stream: an operator fail lands between ramps,
+    # the serve path's dispatch ticks meter the repairs out, recovery heals
+    victims = [v for v in s.alive_slots[:-1]]
+    if victims:
+        victim = int(s.rng.choice(victims))
+        s.mgr.fail(victim)
+        s.res.events += 1
+        fe = s.make_frontend()
+        s.drive(fe, n_requests=80, gap_us=int(capacity_gap * 2), slo_us=4_000)
+        for _ in range(6):
+            s.read_probe(fe, int(s.rng.integers(0, N_PROBE)))
+        s.mgr.recover(victim)
+        s.res.events += 1
+    s.quiesce()
+    s.check_replay()
+
+
+def _run_latency_spike(s: _StreamingRunner) -> None:
+    """A service-time spike + a flapping shard: served requests stay inside
+    the miss bound through the spike, reads whose primary turns suspect
+    hedge to another holder, the breaker trips on the flapper BEFORE the
+    detector removes it, and a later full outage + return flows through
+    fail/recover with repair converging — all on one virtual timeline."""
+    fe = s.make_frontend()
+    slots = list(s.mgr.detector.slots)
+    victim = int(s.rng.choice(slots[:-1])) if len(slots) > 1 else int(slots[0])
+    round_us = 50_000  # 0.05 virtual seconds — one heartbeat interval
+    gap = int(s.BASE_SERVICE_US / s.MAX_BATCH * 2)  # half capacity
+    hedged_seen = 0
+
+    def beat_all(skip_victim: bool):
+        for slot in s.mgr.detector.slots:
+            if skip_victim and slot == victim:
+                continue
+            s.mgr.heartbeat(slot)
+
+    for rnd in range(28):
+        # scripted flap: the victim beats every 4th round only — silence
+        # runs of 0.2s > suspect_after (0.15s) but < fail_after (0.35s),
+        # so it oscillates alive<->suspect without EVER formally failing
+        flapping = 6 <= rnd < 22
+        beat_all(skip_victim=flapping and rnd % 4 != 0)
+        if rnd == 10:
+            s.spike_mult = 2.5  # capped at the declared bound by the model
+        if rnd == 18:
+            s.spike_mult = 1.0
+        s.drive(fe, n_requests=10, gap_us=gap, slo_us=5_000, jitter=0.1)
+        if flapping:
+            for ki in s.keys_with_primary(victim, limit=2):
+                out = s.read_probe(fe, ki)
+                if out is not None and out.hedged:
+                    hedged_seen += 1
+        # pad the round out to the heartbeat cadence
+        s.clock.advance_us(round_us)
+        s._consume(fe.pump())
+    try:
+        if s.mgr.detector.state_of(victim) == REMOVED:
+            s._flag("flapping shard was formally removed despite hysteresis")
+    except KeyError:
+        s._flag("flapping shard fell out of the detector")
+    if fe.breakers.trips == 0:
+        s._flag("breaker never tripped on a scripted 4-flap pattern")
+    elif not hedged_seen and fe.reader.hedge_launched == 0:
+        # breaker-open primaries are excluded from candidacy pre-hedge, so
+        # either hedges fired or the breaker rerouted reads — reads of
+        # victim-primary keys must not still elect the victim
+        for ki in s.keys_with_primary(victim, limit=2):
+            out = s.read_probe(fe, ki)
+            if out is not None and out.shard == victim and len(out.holders) > 1:
+                s._flag(
+                    "breaker open but read still elected the flapping "
+                    f"primary {victim}"
+                )
+    # full outage: silence past fail_after -> ONE detector fail (journaled
+    # via the dispatch tick), repairs metered by the serve path itself
+    for _ in range(10):
+        beat_all(skip_victim=True)
+        s.drive(fe, n_requests=8, gap_us=gap, slo_us=5_000, jitter=0.1)
+        s.clock.advance_us(round_us)
+        s._consume(fe.pump())
+    if victim in s.alive_slots:
+        s._flag("silenced shard never declared failed under serve traffic")
+    # the shard returns: stable beats through quarantine -> ONE recover
+    for _ in range(12):
+        beat_all(skip_victim=False)
+        s.drive(fe, n_requests=8, gap_us=gap, slo_us=5_000, jitter=0.1)
+        s.clock.advance_us(round_us)
+        s._consume(fe.pump())
+    if victim not in s.alive_slots:
+        s._flag("recovered shard never readmitted under serve traffic")
+    s.quiesce()
+    s.check_replay()
+
+
 _STORYLINES = {
     "storm": _run_storm,
     "flap": _run_flap,
@@ -687,6 +1012,8 @@ _STORYLINES = {
     "mixed": _run_mixed,
     "replica_loss": _run_replica_loss,
     "repair_race": _run_repair_race,
+    "overload": _run_overload,
+    "latency_spike": _run_latency_spike,
 }
 
 
@@ -696,6 +1023,10 @@ def run_scenario(kind: str, engine: str, seed: int) -> ScenarioResult:
         raise ValueError(f"unknown scenario kind {kind!r}; expected {KINDS}")
     rng = np.random.default_rng(seed)
     n_initial = int(rng.integers(4, 17))
+    if kind in STREAMING_KINDS:
+        runner = _StreamingRunner(kind, engine, seed, max(n_initial, 6))
+        _STORYLINES[kind](runner)
+        return runner.res
     if kind in PLACEMENT_KINDS:
         rep = 3 if kind == "repair_race" else 2 + seed % 2
         runner = _PlacementRunner(

@@ -133,3 +133,51 @@ def test_serving_tier_elastic_scale_and_last_slot_fail(tiny_model):
     res = tier.serve(reqs)  # still serves everyone on replicas {0, 2}
     assert set(res) == {r.session_id for r in reqs}
     assert all(tier.router.route(r.session_id) in (0, 2) for r in reqs)
+
+
+def test_tier_events_flow_through_attached_lifecycle(tiny_model):
+    """Tier-level fail/recover/scale are journaled via the lifecycle
+    manager, not smuggled past it straight to the router (a bypassed event
+    would break replay parity and never sync the placement repairer)."""
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=4, max_len=32)
+    mgr = tier.attach_lifecycle()
+    tier.fail(1)
+    tier.recover(1)
+    assert tier.scale_up(params) == 4
+    assert tier.scale_down() == 4
+    assert mgr.epoch == 4  # every tier event landed in the journal...
+    mgr.verify_replay()  # ...and the journal replays to the live state
+
+
+def test_repair_converges_under_pure_serve_traffic(tiny_model):
+    """Satellite regression: an attached PlacementRepairer's backlog drains
+    through ``tier.serve`` alone — serve's lifecycle tick IS the repair
+    cadence; no manual ``repairer.tick()`` anywhere."""
+    from repro.placement.store import StorePlacement
+    from repro.serving.lifecycle import ManualClock, PlacementRepairer
+
+    cfg, params = tiny_model
+    tier = ServingTier(cfg, params, n_replicas=6, max_len=32)
+    # manual clock: serve's detector polls must not mistake slow test wall
+    # time for heartbeat silence
+    mgr = tier.attach_lifecycle(clock=ManualClock())
+    store = StorePlacement(tier.router, r=3)
+    keys = np.random.default_rng(5).integers(0, 1 << 32, 256, np.uint32)
+    store.register(keys)
+    repairer = PlacementRepairer(store, mgr, budget_per_tick=64)
+
+    tier.fail(2)  # a TIER event must seed the repair backlog by itself
+    assert repairer.backlog > 0
+    rng = np.random.default_rng(6)
+    reqs = [
+        Request(f"r-{i}", rng.integers(0, cfg.vocab_size, size=4).astype(np.int32), n_new=1)
+        for i in range(4)
+    ]
+    for _ in range(20):
+        if not repairer.backlog:
+            break
+        tier.serve(reqs)
+    assert repairer.backlog == 0
+    assert (store.reachable_counts() == 3).all()
+    repairer.verify_placement_replay()

@@ -1,0 +1,396 @@
+"""Streaming front end: admission, micro-batching, hedging, breakers.
+
+Tier-1 coverage for ``repro.serving.streaming`` (DESIGN.md §14) plus the
+serve-path regressions it rides on: tier-level fleet events flow through
+the lifecycle manager (journaled + repairer-synced), and a backwards clock
+is a typed error, never silent timer corruption.
+"""
+import numpy as np
+import pytest
+
+from repro.placement.store import StorePlacement
+from repro.serving.batch_router import BatchRouter
+from repro.serving.lifecycle import (
+    REMOVED,
+    SUSPECT,
+    AdmissionRejectedError,
+    ClockWentBackwardsError,
+    FailureDetector,
+    HeartbeatConfig,
+    LifecycleConfig,
+    LifecycleManager,
+    ManualClock,
+    PlacementRepairer,
+)
+from repro.serving.lifecycle.errors import (
+    SHED_INFEASIBLE,
+    SHED_LATE,
+    SHED_PAST_DEADLINE,
+    SHED_RATE_LIMITED,
+)
+from repro.serving.streaming import (
+    BreakerBoard,
+    BreakerConfig,
+    HedgedReader,
+    LifecycleDispatch,
+    MicroBatcher,
+    StreamConfig,
+    StreamingFrontEnd,
+    StreamRequest,
+    TokenBucket,
+    VirtualClockUs,
+)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+class _EchoHandle:
+    def __init__(self, reps):
+        self._reps = reps
+
+    def result(self):
+        return self._reps, 0, "normal"
+
+
+def _echo_dispatch(keys_u32):
+    """Dispatch stub: replica = key % 4 (deterministic, device-free)."""
+    return _EchoHandle(np.asarray(keys_u32, np.int64) % 4)
+
+
+def _batcher(service_us=500, **cfg):
+    clock = VirtualClockUs()
+    config = StreamConfig(**{
+        "max_batch": 8, "max_wait_us": 1_000, "service_bound_us": 1_000,
+        **cfg,
+    })
+    b = MicroBatcher(
+        _echo_dispatch, config=config, clock=clock,
+        service_model=lambda n: service_us,
+    )
+    return b, clock
+
+
+def _req(clock, slo_us=10_000, key=7, tenant="default"):
+    return StreamRequest(
+        key=key, deadline_us=clock.now_us() + slo_us, tenant=tenant
+    )
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher core
+# ---------------------------------------------------------------------------
+
+
+def test_batch_closes_at_max_batch_and_window():
+    b, clock = _batcher(max_batch=4)
+    for _ in range(4):
+        b.submit(_req(clock))
+    assert b.dispatches == 1  # size-triggered close
+    b.submit(_req(clock))
+    assert b.open_depth == 1
+    clock.advance_us(1_001)
+    out = b.pump()
+    assert b.dispatches == 2  # window-triggered close
+    clock.advance_us(10_000)
+    out += b.pump() + b.drain()
+    assert len(out) == 5
+    assert all(r.deadline_miss_us == 0 for r in out)
+
+
+def test_results_carry_routing_and_timing():
+    b, clock = _batcher(max_batch=2, service_us=400)
+    b.submit(StreamRequest(key=9, deadline_us=clock.now_us() + 5_000))
+    b.submit(StreamRequest(key=10, deadline_us=clock.now_us() + 5_000))
+    clock.advance_us(400)
+    (r9, r10) = b.pump()
+    assert (r9.replica, r10.replica) == (9 % 4, 10 % 4)
+    assert r9.t_complete_us == r9.t_dispatch_us + 400
+    assert r9.latency_us == 400
+
+
+def test_pipeline_overlaps_one_deep():
+    b, clock = _batcher(max_batch=2, service_us=2_000)
+    b.submit(_req(clock))
+    b.submit(_req(clock))
+    assert b.inflight_depth == 2
+    b.submit(_req(clock))  # fills while the previous batch "computes"
+    assert b.open_depth == 1 and b.inflight_depth == 2
+    clock.advance_us(500)
+    b.pump()
+    # window expired but the pipeline slot is busy: adaptive sizing keeps
+    # the open batch filling instead of dispatching a sliver
+    clock.advance_us(600)
+    b.pump()
+    assert b.dispatches == 1 and b.open_depth == 1
+    clock.advance_us(1_000)  # in-flight ETA passes
+    b.pump()
+    assert b.dispatches == 2
+
+
+def test_deadline_miss_bounded_by_one_window_under_backlog():
+    b, clock = _batcher(max_batch=4, service_us=900, service_bound_us=1_000)
+    rng = np.random.default_rng(3)
+    served = []
+    for _ in range(300):
+        try:
+            b.submit(_req(clock, slo_us=2_500, key=int(rng.integers(1 << 32))))
+        except AdmissionRejectedError:
+            pass
+        clock.advance_us(60)  # ~4x over capacity
+        served.extend(b.pump())
+    served.extend(b.drain())
+    assert served, "over capacity but nothing served"
+    assert max(r.deadline_miss_us for r in served) <= 1_000
+    assert b.admission.shed_total > 0
+
+
+# ---------------------------------------------------------------------------
+# degenerate edges (ISSUE satellite: empty window, max_batch=1, DOA, bucket)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_request_batch_window_is_noop():
+    b, clock = _batcher()
+    for _ in range(5):
+        clock.advance_us(2_000)
+        assert b.pump() == []
+    assert b.drain() == []
+    assert b.dispatches == 0 and b.served == 0
+
+
+def test_max_batch_one_dispatches_every_submit():
+    b, clock = _batcher(max_batch=1, service_us=100)
+    for i in range(3):
+        b.submit(_req(clock, key=i))
+        clock.advance_us(150)
+    out = b.pump() + b.drain()
+    assert [r.request.key for r in out] == [0, 1, 2]
+    assert b.dispatches == 3
+
+
+def test_all_requests_past_deadline_on_arrival():
+    b, clock = _batcher()
+    clock.advance_us(5_000)
+    for _ in range(4):
+        with pytest.raises(AdmissionRejectedError) as ei:
+            b.submit(
+                StreamRequest(key=1, deadline_us=clock.now_us() - 1)
+            )
+        assert ei.value.reason == SHED_PAST_DEADLINE
+    assert b.dispatches == 0
+    assert b.admission.shed_by_reason[SHED_PAST_DEADLINE] == 4
+
+
+def test_single_tenant_bucket_exhaustion():
+    b, clock = _batcher(
+        max_batch=64, tenant_rate_per_s=10.0, tenant_burst=2.0
+    )
+    ok = shed = 0
+    for _ in range(5):
+        try:
+            b.submit(_req(clock, tenant="hog"))
+            ok += 1
+        except AdmissionRejectedError as e:
+            assert e.reason == SHED_RATE_LIMITED
+            assert e.tenant == "hog"
+            shed += 1
+    assert (ok, shed) == (2, 3)
+    # an unrelated tenant is not starved by the hog's empty bucket
+    b.submit(_req(clock, tenant="quiet"))
+    # and the hog's bucket refills with time (10/s -> one per 100ms)
+    clock.advance_us(150_000)
+    b.submit(_req(clock, tenant="hog"))
+    assert b.admission.shed_by_tenant[("hog", SHED_RATE_LIMITED)] == 3
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_infeasible_deadline_shed_at_admission():
+    b, clock = _batcher(service_bound_us=2_000)
+    with pytest.raises(AdmissionRejectedError) as ei:
+        b.submit(_req(clock, slo_us=500))  # bound 2000 > 500 + window 1000
+    assert ei.value.reason == SHED_INFEASIBLE
+
+
+def test_late_requests_shed_typed_at_batch_close():
+    b, clock = _batcher(max_batch=4, service_us=1_500, service_bound_us=1_500)
+    b.submit(_req(clock, slo_us=1_700))  # feasible NOW: 0+1500 <= 1700+1000
+    clock.advance_us(1_300)  # ...but the close ran late: 1300+1500 > 2700
+    assert b.pump() == []
+    assert b.dispatches == 0  # the whole batch was shed, nothing dispatched
+    assert b.admission.shed_by_reason[SHED_LATE] == 1
+    assert b.drain() == []
+
+
+def test_token_bucket_refill_and_burst_cap():
+    tb = TokenBucket(rate_per_s=100.0, burst=5.0)
+    assert all(tb.try_take(0) for _ in range(5))
+    assert not tb.try_take(0)
+    assert tb.try_take(10_000)  # +1 token after 10ms at 100/s
+    assert not tb.try_take(10_001)
+    tb2 = TokenBucket(rate_per_s=100.0, burst=5.0)
+    tb2.try_take(10_000_000)  # long idle: capped at burst, not rate*dt
+    assert tb2.tokens == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# the real dispatch path (lifecycle-wrapped router)
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_dispatch_routes_alive_only_and_ticks_repairs():
+    clock = VirtualClockUs()
+    router = BatchRouter(6, engine="binomial")
+    mgr = LifecycleManager(
+        router, LifecycleConfig(min_alive_floor=1),
+        clock=clock.seconds_view(),
+    )
+    store = StorePlacement(router, r=3)
+    keys = np.random.default_rng(0).integers(0, 1 << 32, 256, np.uint32)
+    store.register(keys)
+    PlacementRepairer(store, mgr, budget_per_tick=512)
+    fe = StreamingFrontEnd(
+        mgr, store=store,
+        config=StreamConfig(max_batch=8, max_wait_us=500,
+                            service_bound_us=2_000),
+        clock=clock, service_model=lambda n: 300,
+    )
+    mgr.fail(2)
+    backlog0 = mgr._placement.backlog
+    assert backlog0 > 0
+    rng = np.random.default_rng(1)
+    served = []
+    for _ in range(40):
+        fe.submit(StreamRequest(
+            key=int(rng.integers(0, 1 << 32)),
+            deadline_us=clock.now_us() + 10_000,
+        ))
+        clock.advance_us(400)
+        served.extend(fe.pump())
+    served.extend(fe.drain())
+    assert len(served) == 40
+    alive = set(range(6)) - {2}
+    assert {r.replica for r in served} <= alive
+    assert all(r.epoch == mgr.epoch for r in served)
+    # the DISPATCHES drove the repairs — no manual repairer ticks anywhere
+    assert mgr._placement.backlog == 0
+    assert (store.reachable_counts() == 3).all()
+
+
+# ---------------------------------------------------------------------------
+# hedged reads + breakers
+# ---------------------------------------------------------------------------
+
+
+def _hedging_rig(r=3, n=6):
+    clock = VirtualClockUs()
+    router = BatchRouter(n, engine="binomial")
+    mgr = LifecycleManager(router, clock=clock.seconds_view())
+    store = StorePlacement(router, r=r)
+    keys = np.random.default_rng(7).integers(0, 1 << 32, 64, np.uint32)
+    store.register(keys)
+    return clock, router, mgr, store
+
+
+def test_suspect_primary_hedges_to_next_holder():
+    clock, router, mgr, store = _hedging_rig()
+    primary = int(store.holders[0, 0])
+    board = BreakerBoard(mgr.detector, clock)
+    reader = HedgedReader(
+        store, mgr.detector, board, hedge_after_us=300,
+        probe=lambda s: 900 if s == primary else 120,
+    )
+    healthy = reader.read(0)
+    assert not healthy.hedged and healthy.shard == primary
+    # silence the primary past suspect_after; poll via tick
+    for s in mgr.detector.slots:
+        if s != primary:
+            mgr.heartbeat(s)
+    clock.advance_us(4_000_000)  # 4s > suspect_after (3s), < fail (6s)
+    mgr.tick()
+    assert mgr.detector.state_of(primary) == SUSPECT
+    out = reader.read(0)
+    assert out.hedged
+    assert out.shard in out.holders
+    assert out.shard != primary  # hedge won: 300 + 120 < 900
+    assert out.latency_us == 420
+
+
+def test_breaker_trips_on_flaps_and_reroutes_before_removal():
+    clock, router, mgr, store = _hedging_rig()
+    primary = int(store.holders[0, 0])
+    board = BreakerBoard(
+        mgr.detector, clock,
+        BreakerConfig(trip_after=3, window_us=60_000_000,
+                      cooldown_us=5_000_000),
+    )
+    reader = HedgedReader(
+        store, mgr.detector, board, hedge_after_us=300,
+        probe=lambda s: 120,  # primary FAST: only the breaker can reroute
+    )
+    # three scripted alive->suspect flips (each healed by a beat: the
+    # detector's hysteresis never emits a formal fail)
+    for _ in range(3):
+        for s in mgr.detector.slots:
+            if s != primary:
+                mgr.heartbeat(s)
+        clock.advance_us(4_000_000)
+        mgr.tick()
+        assert mgr.detector.state_of(primary) == SUSPECT
+        board.observe()
+        mgr.heartbeat(primary)  # heals: suspect -> alive, no event
+        mgr.tick()
+        board.observe()  # sees the healed state between flips
+    assert board.trips == 1
+    assert board.is_open(primary)
+    assert mgr.detector.state_of(primary) != REMOVED
+    out = reader.read(0)
+    # breaker-open primary is out of the ballot entirely — no hedge needed
+    assert out.shard != primary and out.shard in out.holders
+    clock.advance_us(5_000_001)  # cooldown: half-open, candidate again
+    assert not board.is_open(primary)
+    assert reader.read(0).shard == primary
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: detector clock + tier events through lifecycle
+# ---------------------------------------------------------------------------
+
+
+class _Warpable:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+def test_backwards_clock_is_typed_error():
+    clk = _Warpable()
+    det = FailureDetector([0, 1, 2], HeartbeatConfig(), clk)
+    clk.t = 101.0
+    det.heartbeat(0)
+    det.poll()
+    clk.t = 42.0  # the warp
+    with pytest.raises(ClockWentBackwardsError) as ei:
+        det.poll()
+    assert ei.value.now == 42.0 and ei.value.last == 101.0
+    with pytest.raises(ClockWentBackwardsError):
+        det.heartbeat(1)
+    with pytest.raises(ClockWentBackwardsError):
+        det.register(9)
+    # time restored: the detector resumes (state was never corrupted)
+    clk.t = 102.0
+    det.heartbeat(1)
+    assert det.poll() == []
+
+
+def test_manual_clock_still_rejects_negative_advance():
+    with pytest.raises(ValueError, match="backwards"):
+        ManualClock().advance(-0.5)
