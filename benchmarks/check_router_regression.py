@@ -57,6 +57,12 @@ the fused datapath:
   breach means the R-way tier lost the paper's minimal-disruption
   property, a correctness bug), and both engines must report positive
   placement throughput.
+* **observability record** (``--observability-current``, from
+  ``bench_observability``): the instrumented fused route (the load
+  monitor's per-shard bincount riding in the same dispatch) costs at most
+  3% over the bare route at full batch sizes (>= 1M keys); at smoke sizes
+  only a loose sanity cap applies, since fixed dispatch overhead sits in
+  both sides of the ratio.
 
 The CANONICAL records: full runs (run.py) write the tracked
 ``BENCH_router.json`` at the repo root; ``--smoke`` runs write the
@@ -377,6 +383,41 @@ def check_serving(serv: dict) -> list[str]:
     return failures
 
 
+#: hard cap on the instrumented/bare fused-route overhead at full batch
+#: sizes (>= OBS_CAP_MIN_BATCH keys, where per-dispatch overhead has
+#: amortised out): the load bincount rides inside the same fused dispatch,
+#: so telemetry may cost at most 3%.  At smoke sizes fixed dispatch
+#: overhead dominates both sides, so only a loose sanity cap applies.
+OBS_OVERHEAD_CAP = 1.03
+OBS_SMOKE_OVERHEAD_CAP = 1.50
+OBS_CAP_MIN_BATCH = 1 << 20
+
+
+def check_observability(obs: dict) -> list[str]:
+    """Gate a ``bench_observability`` record: instrumented-route overhead."""
+    failures: list[str] = []
+    batch = int(obs.get("batch_keys") or 0)
+    full = batch >= OBS_CAP_MIN_BATCH
+    cap = OBS_OVERHEAD_CAP if full else OBS_SMOKE_OVERHEAD_CAP
+    per_engine = obs.get("per_engine", {})
+    if not per_engine:
+        return ["observability record has no per_engine section"]
+    for engine, rec in sorted(per_engine.items()):
+        ratio = float(rec["overhead_ratio"])
+        print(
+            f"observability[{engine}]: instrumented/bare ratio {ratio:.4f} "
+            f"at {batch} keys (cap {cap:.2f}"
+            + ("" if full else ", smoke sanity cap")
+            + ")"
+        )
+        if ratio > cap:
+            failures.append(
+                f"observability[{engine}] instrumented route overhead "
+                f"{ratio:.4f} breaks the {cap:.2f}x cap at {batch} keys"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="benchmarks/out/BENCH_router_smoke.json")
@@ -399,6 +440,12 @@ def main(argv: list[str] | None = None) -> int:
              "BENCH_serving_smoke.json in CI, BENCH_serving.json for "
              "full runs)",
     )
+    ap.add_argument(
+        "--observability-current", default=None,
+        help="bench_observability record to gate (e.g. benchmarks/out/"
+             "BENCH_observability_smoke.json in CI, "
+             "BENCH_observability.json for full runs)",
+    )
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -416,6 +463,9 @@ def main(argv: list[str] | None = None) -> int:
     if args.serving_current:
         with open(args.serving_current) as f:
             failures += check_serving(json.load(f))
+    if args.observability_current:
+        with open(args.observability_current) as f:
+            failures += check_observability(json.load(f))
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -22,6 +22,7 @@ def main() -> None:
         bench_kernel,
         bench_lookup,
         bench_moe_routing,
+        bench_observability,
         bench_placement,
         bench_roofline,
         bench_router,
@@ -40,6 +41,7 @@ def main() -> None:
         ("elastic placement", bench_elastic),
         ("replicated store placement (R-way tier)", bench_placement),
         ("streaming serving tier (micro-batch + admission)", bench_serving),
+        ("observability tier (instrumented route overhead)", bench_observability),
         ("roofline table (from dry-run)", bench_roofline),
     ]
     failures = 0

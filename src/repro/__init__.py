@@ -1,5 +1,6 @@
 """repro — BinomialHash consistent hashing as the placement/routing substrate
-of a multi-pod JAX training/inference framework. See README.md / DESIGN.md.
+of a multi-pod JAX training/inference framework. See DESIGN.md for the
+architecture notes and ``examples/`` for runnable entry points.
 
 The curated public surface (``__all__``):
 
@@ -15,7 +16,10 @@ The curated public surface (``__all__``):
   the vectorised session-id ingest;
 * ``StorePlacement`` / ``PlacementSpec`` / ``PlacementRepairer`` +
   ``route_replicas_bulk`` / ``placement_diff_bulk`` — the R-way replicated
-  placement tier (DESIGN.md §13).
+  placement tier (DESIGN.md §13);
+* ``MetricsRegistry`` / ``LoadMonitor`` / ``SpanTrace`` +
+  ``route_load_bulk`` and the ``BalanceDriftAlarm`` /
+  ``DisruptionBoundAlarm`` types — the observability tier (DESIGN.md §15).
 
 Attributes resolve lazily (PEP 562): ``import repro`` stays light, and the
 serving stack (models, configs) only loads when actually touched.
@@ -47,6 +51,13 @@ _EXPORTS = {
     "PlacementRepairer": "repro.serving.lifecycle",
     "route_replicas_bulk": "repro.kernels.ops",
     "placement_diff_bulk": "repro.kernels.ops",
+    "MetricsRegistry": "repro.observability",
+    "LoadMonitor": "repro.observability",
+    "LoadConfig": "repro.observability",
+    "SpanTrace": "repro.observability",
+    "BalanceDriftAlarm": "repro.observability",
+    "DisruptionBoundAlarm": "repro.observability",
+    "route_load_bulk": "repro.kernels.ops",
 }
 
 __all__ = list(_EXPORTS)

@@ -578,6 +578,47 @@ def certify_placement_route(
     )
 
 
+def certify_load_pass(
+    engine_name: str, contract: Optional[EngineContract] = None
+) -> TargetReport:
+    """Certify the observability-instrumented route (DESIGN.md §15).
+
+    ``observability/load_pass`` is the device pass of
+    ``repro.observability.load``: the engine's fused route plus ONE
+    in-bounds bincount accumulating per-shard key counts — the
+    instrumented dispatch ``BatchRouter`` runs with a ``LoadMonitor``
+    attached.  Traced at the monitor's default bulk-batch config
+    (``LoadConfig().sample_shift``) — the exact path (shift 0) is a
+    strict sub-graph of it (drop the stride slice).  Same contract as
+    the bare route: while-free, ω-affine (the accumulate adds a constant
+    term only), dtype-closed, callback-free, zero transfers — proving
+    the load accumulator costs one fused reduction and adds NOTHING
+    host-visible to the hot path.
+    """
+    contract = contract or contract_for(engine_name)
+    from repro.core.memento_jax import mask_words
+    from repro.core.registry import make_bulk
+    from repro.observability.load import LoadConfig, route_with_load_impl
+
+    eng = make_bulk(engine_name)
+    keys, packed, table, state = _fleet_operands(contract)
+    counts = np.zeros((contract.capacity,), np.uint32)
+    n_words = mask_words(contract.capacity)
+    shift = LoadConfig().sample_shift
+
+    def tracer(om):
+        return jax.make_jaxpr(
+            lambda k, p, t, s, c: route_with_load_impl(
+                k, p, t, s, c, omega=om, n_words=n_words, route=eng.route,
+                sample_shift=shift,
+            )
+        )(keys, packed, table, state, counts)
+
+    return certify_callable(
+        engine_name, "observability/load_pass", tracer, contract=contract
+    )
+
+
 def certify_all(
     engines: Optional[Iterable[str]] = None, *, include_chain_baseline: bool = True
 ) -> Report:
@@ -591,6 +632,7 @@ def certify_all(
         report.targets.append(certify_lifecycle_route(name))
         report.targets.append(certify_placement_route(name))
         report.targets.append(certify_streaming_route(name))
+        report.targets.append(certify_load_pass(name))
     if include_chain_baseline:
         report.targets.append(certify_chain_baseline())
     return report

@@ -11,6 +11,8 @@ calls one function everywhere.
 Spec-era entry points:
 
 * ``route_bulk(keys, fleet, spec)``                — fused lookup + divert;
+* ``route_load_bulk(keys, fleet, counts, spec)``   — fused route + per-shard
+  load accumulate (the observability tier's instrumented dispatch);
 * ``route_ingest_bulk(lo, hi, fleet, spec)``       — fused u64-id ingest;
 * ``lookup_bulk_dyn(keys, n, spec)``               — plain traced-n lookup;
 * ``make_sharded_route(mesh, spec)``               — the mesh-sharded route.
@@ -94,6 +96,42 @@ def route_bulk(keys: jax.Array, fleet: FleetState, spec: RouterSpec) -> jax.Arra
     return eng.route(
         keys, fleet.packed, fleet.table, fleet.state,
         omega=spec.omega, n_words=spec.n_words,
+    )
+
+
+def route_load_bulk(
+    keys: jax.Array, fleet: FleetState, counts: jax.Array, spec: RouterSpec,
+    *, sample_shift: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Instrumented fused routing: route + per-shard load accumulate in ONE
+    dispatch — ``(replicas (N,) i32, new_counts (capacity,) u32)``.
+
+    The observability tier's device pass (DESIGN.md §15): the spec'd
+    engine's fused jnp route plus a bincount of the replica vector into a
+    device-resident accumulator, all under one jitted executable.  With
+    ``sample_shift > 0`` the bincount covers the ``[::2**shift]`` stride
+    sample at weight ``2**shift`` — key-unit estimates for bulk batches
+    where exact counting would break the overhead budget (the
+    ``LoadMonitor`` picks the shift per batch via its exact cutoff).
+    Replica ids are bit-exact with ``route_bulk`` at every shift — the
+    instrumentation never changes routing — and the accumulator stays on
+    device (the monitor drains it on its own cadence).  Like the
+    placement pass, pure-jnp on every backend (the accumulate is one
+    comparison-sum or scatter — no Pallas twin); certified as
+    ``observability/load_pass``.
+
+    keys    any int shape (u32 key space)
+    fleet   ``FleetState``;  counts  (capacity,) u32 running accumulator
+    spec    ``RouterSpec`` — engine, capacity, ω
+    """
+    from repro.observability.load import _route_with_load_jit  # late:
+    # observability imports this module
+
+    eng = _engine(spec)
+    return _route_with_load_jit(
+        keys, fleet.packed, fleet.table, fleet.state, counts,
+        omega=spec.omega, n_words=spec.n_words, route=eng.route,
+        sample_shift=sample_shift,
     )
 
 

@@ -210,6 +210,10 @@ class BatchRouter:
         self._fleet_host = FleetState.pack(self.domain, spec.capacity)
         self._fleet_dev: FleetState | None = None
         self._n_dev: jax.Array | None = None
+        #: attached observability LoadMonitor (None = uninstrumented): when
+        #: set, the fused dispatch runs the instrumented route so the
+        #: per-shard bincount rides in the SAME device pass as the routing
+        self._load_monitor = None
         #: routing epoch: one tick per fleet event — callers (and the
         #: lifecycle layer) use it to detect placements staled by later
         #: events; the journal's epochs match it one-to-one
@@ -374,7 +378,13 @@ class BatchRouter:
             probe = np.zeros((rows * LANES,), dtype=np.uint32)
 
             def measure(candidate: int) -> None:
-                jax.block_until_ready(self._dispatch(probe, candidate))
+                # probe batches are timing scaffolding, not traffic: keep
+                # them out of any attached load accumulator
+                monitor, self._load_monitor = self._load_monitor, None
+                try:
+                    jax.block_until_ready(self._dispatch(probe, candidate))
+                finally:
+                    self._load_monitor = monitor
 
             flavour = "fused" if self.fused else "two_pass"
             if self.spec.engine != "binomial":
@@ -425,10 +435,45 @@ class BatchRouter:
             return np.ascontiguousarray(keys)
         return np.ascontiguousarray(keys, dtype=np.uint64).astype(np.uint32)
 
+    # -- load-monitor attachment (observability tier, DESIGN.md §15) --------
+    def attach_load_monitor(self, monitor) -> None:
+        """Instrument the fused dispatch with the monitor's device-side
+        load accumulator (``ops.route_load_bulk``).  Replica ids stay
+        bit-exact with the uninstrumented path; the accumulate is folded
+        into the same single dispatch.  Single-host fused datapath only —
+        the mesh-sharded and two-pass paths are not instrumented."""
+        if self.mesh is not None:
+            raise ValueError(
+                "load monitoring is single-host only; the mesh-sharded "
+                "datapath is not instrumented"
+            )
+        if not self.fused:
+            raise ValueError(
+                "load monitoring requires the fused datapath "
+                "(fused=False is the two-pass benchmark baseline)"
+            )
+        self._load_monitor = monitor
+
+    def detach_load_monitor(self) -> None:
+        self._load_monitor = None
+
     def _dispatch(self, keys_u32, block_rows: int) -> jax.Array:
         """Single-host dispatch of one batch at a given tiling."""
         spec = self._dispatch_spec(block_rows)
         if self.fused:
+            monitor = self._load_monitor
+            if monitor is not None:
+                # the instrumented route: same dispatch count, the per-shard
+                # bincount rides along (always the fused jnp pass — like the
+                # placement pass it has no Pallas twin; bit-exact with the
+                # kernel, as tests enforce)
+                n_keys = int(np.size(keys_u32))
+                out, counts = ops.route_load_bulk(
+                    keys_u32, self._fleet_dev, monitor.counts_dev, spec,
+                    sample_shift=monitor.effective_shift(n_keys),
+                )
+                monitor.note_dispatch(counts, n_keys)
+                return out
             return ops.route_bulk(keys_u32, self._fleet_dev, spec)
         # pre-fusion two-pass pipeline (benchmark baseline): buckets[N]
         # round-trips through HBM between two dispatches

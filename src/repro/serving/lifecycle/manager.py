@@ -77,10 +77,19 @@ class RoutedBatch(NamedTuple):
 
 
 class LifecycleManager:
-    def __init__(self, router, config: LifecycleConfig | None = None, clock=None):
+    def __init__(
+        self,
+        router,
+        config: LifecycleConfig | None = None,
+        clock=None,
+        tracer=None,
+    ):
         self.router = router
         self.config = config or LifecycleConfig()
         self.clock = clock or MonotonicClock()
+        #: optional SpanTrace — each tick() records a ``lifecycle_tick``
+        #: span (the streaming front end attaches its shared trace here)
+        self.tracer = tracer
         #: attached PlacementRepairer (None = no placement tier); every
         #: journaled membership mutation re-syncs it
         self._placement: "PlacementRepairer | None" = None
@@ -135,6 +144,12 @@ class LifecycleManager:
         events = self.apply(self.detector.poll())
         if self._placement is not None:
             self._placement.tick()
+        if self.tracer is not None:
+            now_us = int(self.clock.now() * 1_000_000)
+            self.tracer.record(
+                "lifecycle_tick", now_us, now_us,
+                events=len(events), epoch=self.epoch,
+            )
         return events
 
     # -- membership events (all journaled) -----------------------------------

@@ -5,7 +5,11 @@ cannot make its SLO given the current pipeline state is shed AT THE DOOR
 with a typed ``AdmissionRejectedError`` — it never occupies a batch slot,
 never poisons tail latency, and the caller gets a machine-readable reason
 (``SHED_*``) instead of a timeout.  Shedding is the controller *working*,
-so every rejection is counted per reason and per tenant.
+so every rejection lands in the observability registry as a
+``stream_shed_total{tenant, reason}`` counter series (admits as
+``stream_admitted_total{tenant}``); the ``admitted`` / ``shed_by_reason``
+/ ``shed_by_tenant`` properties are aggregate views over those series,
+kept for callers that predate the registry.
 
 Admission checks, in order:
 
@@ -91,15 +95,40 @@ class AdmissionConfig:
 
 
 class AdmissionController:
-    """Stateful admission gate: per-tenant buckets + shed accounting."""
+    """Stateful admission gate: per-tenant buckets + registry-backed shed
+    accounting (``metrics=None`` builds a private ``MetricsRegistry``; the
+    front end passes its shared one)."""
 
-    def __init__(self, config: AdmissionConfig | None = None):
+    def __init__(
+        self, config: AdmissionConfig | None = None, metrics=None
+    ):
         self.config = config or AdmissionConfig()
         self._buckets: dict[str, TokenBucket] = {}
-        #: sheds by reason code, and by (tenant, reason)
-        self.shed_by_reason: dict[str, int] = {}
-        self.shed_by_tenant: dict[tuple[str, str], int] = {}
-        self.admitted = 0
+        if metrics is None:
+            from repro.observability.metrics import MetricsRegistry
+
+            metrics = MetricsRegistry()
+        self.metrics = metrics
+
+    # -- aggregate views over the registry series ----------------------------
+    @property
+    def admitted(self) -> int:
+        return self.metrics.total("stream_admitted_total")
+
+    @property
+    def shed_by_reason(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for m in self.metrics.family("stream_shed_total").values():
+            reason = m.labels["reason"]
+            out[reason] = out.get(reason, 0) + m.value
+        return out
+
+    @property
+    def shed_by_tenant(self) -> dict[tuple[str, str], int]:
+        return {
+            (m.labels["tenant"], m.labels["reason"]): m.value
+            for m in self.metrics.family("stream_shed_total").values()
+        }
 
     def _bucket(self, tenant: str, now_us: int) -> TokenBucket | None:
         if self.config.tenant_rate_per_s is None:
@@ -115,9 +144,9 @@ class AdmissionController:
     def _shed(
         self, reason: str, tenant: str, deadline_us: int, now_us: int
     ) -> AdmissionRejectedError:
-        self.shed_by_reason[reason] = self.shed_by_reason.get(reason, 0) + 1
-        key = (tenant, reason)
-        self.shed_by_tenant[key] = self.shed_by_tenant.get(key, 0) + 1
+        self.metrics.counter(
+            "stream_shed_total", tenant=tenant, reason=reason
+        ).inc()
         return AdmissionRejectedError(
             reason, tenant=tenant, deadline_us=deadline_us, now_us=now_us
         )
@@ -137,15 +166,15 @@ class AdmissionController:
         best_done = max(dispatch_eta_us, now_us) + cfg.service_bound_us
         if best_done > deadline_us + cfg.max_wait_us:
             raise self._shed(SHED_INFEASIBLE, tenant, deadline_us, now_us)
-        self.admitted += 1
+        self.metrics.counter("stream_admitted_total", tenant=tenant).inc()
 
     def record_late_shed(self, tenant: str, reason: str) -> None:
         """Account a batch-close shed (the second gate lives in the
         batcher, the ledger lives here)."""
-        self.shed_by_reason[reason] = self.shed_by_reason.get(reason, 0) + 1
-        key = (tenant, reason)
-        self.shed_by_tenant[key] = self.shed_by_tenant.get(key, 0) + 1
+        self.metrics.counter(
+            "stream_shed_total", tenant=tenant, reason=reason
+        ).inc()
 
     @property
     def shed_total(self) -> int:
-        return sum(self.shed_by_reason.values())
+        return self.metrics.total("stream_shed_total")

@@ -21,8 +21,16 @@ the declared ``service_bound_us``, an admitted-and-served request
 therefore misses its deadline by AT MOST one batch window — the invariant
 the chaos ``overload``/``latency_spike`` storylines assert seed after
 seed.  The bound is a *declaration* (an SLO capacity statement), not a
-measurement: EWMA-tracked observed service time is exported for
-observability but never silently substituted into the guarantee.
+measurement: observed service time is EWMA-tracked into the registry's
+``stream_service_ewma_us`` gauge for observability but never silently
+substituted into the guarantee.
+
+Telemetry (DESIGN.md §15): served/dispatch counters, batch-size and
+per-tenant request-latency histograms all land in the shared
+``MetricsRegistry``, and with a ``SpanTrace`` attached the batcher
+records the request-path spans (``admit`` at submit, ``batch_close`` +
+``dispatch`` at close, one ``request`` span per served request at
+collect) on the same µs timeline the batcher itself runs on.
 
 Time is pluggable (``clock.now_us()``): virtual for chaos/bench
 determinism, wall for production.  In virtual mode the service model is
@@ -170,11 +178,24 @@ class MicroBatcher:
         clock=None,
         admission: AdmissionController | None = None,
         service_model: Callable[[int], int] | None = None,
+        metrics=None,
+        tracer=None,
     ):
         self.config = config or StreamConfig()
         self.clock = clock or WallClockUs()
         self.dispatch_fn = dispatch_fn
-        self.admission = admission or AdmissionController(self.config.admission())
+        if metrics is None:
+            if admission is not None:
+                metrics = admission.metrics  # share the controller's ledger
+            else:
+                from repro.observability.metrics import MetricsRegistry
+
+                metrics = MetricsRegistry(clock=self.clock)
+        self.metrics = metrics
+        self.tracer = tracer
+        self.admission = admission or AdmissionController(
+            self.config.admission(), metrics=metrics
+        )
         self.service_model = service_model
         self._open: list[StreamRequest] = []
         self._open_since_us: int | None = None
@@ -182,10 +203,24 @@ class MicroBatcher:
         self._last_done_us = 0
         self._completed: list[StreamResult] = []
         #: EWMA of observed service µs (observability only — the guarantee
-        #: reasons against the declared bound, never this)
+        #: reasons against the declared bound, never this); mirrored to the
+        #: ``stream_service_ewma_us`` gauge on every collect
         self.service_ewma_us: float = float(self.config.service_bound_us)
-        self.served = 0
-        self.dispatches = 0
+        self._served = metrics.counter("stream_served_total")
+        self._dispatched = metrics.counter("stream_dispatches_total")
+        self._batch_sizes = metrics.histogram(
+            "stream_batch_size",
+            bounds=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+        )
+
+    #: registry-backed counters, exposed under the historical names
+    @property
+    def served(self) -> int:
+        return self._served.value
+
+    @property
+    def dispatches(self) -> int:
+        return self._dispatched.value
 
     # -- pipeline state -------------------------------------------------------
     @property
@@ -210,6 +245,11 @@ class MicroBatcher:
         self.admission.admit(
             request.tenant, request.deadline_us, now, self.dispatch_eta_us(now)
         )
+        if self.tracer is not None:
+            self.tracer.record(
+                "admit", now, now, tenant=request.tenant,
+                deadline_us=request.deadline_us,
+            )
         if not self._open:
             self._open_since_us = now
         self._open.append(request)
@@ -269,12 +309,21 @@ class MicroBatcher:
             return
         keys = np.asarray([r.key for r in keep], dtype=np.uint32)
         handle = self.dispatch_fn(keys)
-        self.dispatches += 1
+        self._dispatched.inc()
+        self._batch_sizes.observe(len(keep))
         bound = (
             self.service_model(len(keep))
             if self.service_model is not None
             else cfg.service_bound_us
         )
+        if self.tracer is not None:
+            self.tracer.record(
+                "batch_close", start, start, size=len(keep),
+                shed=len(batch) - len(keep),
+            )
+            self.tracer.record(
+                "dispatch", start, start + int(bound), size=len(keep)
+            )
         self._inflight = _Inflight(keep, handle, start, start + int(bound))
 
     def _collect(self) -> None:
@@ -293,6 +342,7 @@ class MicroBatcher:
             done = max(self.clock.now_us(), inf.t_dispatch_us + 1)
         self._last_done_us = done
         self.service_ewma_us += 0.1 * (float(service_us) - self.service_ewma_us)
+        self.metrics.gauge("stream_service_ewma_us").set(self.service_ewma_us)
         for req, rep in zip(inf.requests, replicas):
             self._completed.append(
                 StreamResult(
@@ -304,4 +354,12 @@ class MicroBatcher:
                     mode=mode,
                 )
             )
-        self.served += len(inf.requests)
+            self.metrics.histogram(
+                "stream_request_latency_us", tenant=req.tenant
+            ).observe(max(0, done - req.arrival_us))
+            if self.tracer is not None:
+                self.tracer.record(
+                    "request", req.arrival_us, done, tenant=req.tenant,
+                    replica=int(rep), epoch=epoch,
+                )
+        self._served.inc(len(inf.requests))

@@ -12,6 +12,12 @@ Everything is deterministic under an injected ``VirtualClockUs``: the
 chaos storylines and the serving bench drive the exact same code with a
 scripted timeline, and production swaps in ``WallClockUs`` with no other
 change.
+
+Telemetry: the front end owns ONE ``MetricsRegistry`` (on its clock) and
+one ``SpanTrace`` shared by every component it assembles — pass
+``metrics=`` / ``tracer=`` to aggregate several front ends into a common
+ledger.  ``stats()`` is an aggregate snapshot over the registry;
+``repro.observability.export`` renders the full thing.
 """
 from __future__ import annotations
 
@@ -41,20 +47,37 @@ class StreamingFrontEnd:
         dispatch_fn=None,
         service_model=None,
         probe=None,
+        metrics=None,
+        tracer=None,
     ):
+        from repro.observability.metrics import MetricsRegistry
+        from repro.observability.trace import SpanTrace
+
         self.manager = manager
         self.store = store
         self.config = config or StreamConfig()
         self.clock = clock or WallClockUs()
-        self.admission = AdmissionController(self.config.admission())
+        self.metrics = (
+            metrics if metrics is not None else MetricsRegistry(clock=self.clock)
+        )
+        self.tracer = tracer if tracer is not None else SpanTrace()
+        if getattr(manager, "tracer", None) is None:
+            manager.tracer = self.tracer
+        self.admission = AdmissionController(
+            self.config.admission(), metrics=self.metrics
+        )
         self.batcher = MicroBatcher(
             dispatch_fn if dispatch_fn is not None else LifecycleDispatch(manager),
             config=self.config,
             clock=self.clock,
             admission=self.admission,
             service_model=service_model,
+            metrics=self.metrics,
+            tracer=self.tracer,
         )
-        self.breakers = BreakerBoard(manager.detector, self.clock, breaker_config)
+        self.breakers = BreakerBoard(
+            manager.detector, self.clock, breaker_config, metrics=self.metrics
+        )
         self.reader = (
             HedgedReader(
                 store,
@@ -62,6 +85,9 @@ class StreamingFrontEnd:
                 self.breakers,
                 self.config.hedge_after_us,
                 probe=probe,
+                metrics=self.metrics,
+                tracer=self.tracer,
+                clock=self.clock,
             )
             if store is not None
             else None
@@ -95,6 +121,8 @@ class StreamingFrontEnd:
 
     # -- observability --------------------------------------------------------
     def stats(self) -> dict:
+        """Aggregate snapshot over the shared registry (historical shape);
+        ``repro.observability.export.snapshot`` renders every series."""
         b, a = self.batcher, self.admission
         out = {
             "admitted": a.admitted,

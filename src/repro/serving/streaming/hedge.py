@@ -49,16 +49,33 @@ class BreakerConfig:
 
 
 class BreakerBoard:
-    """Per-shard circuit breakers fed by detector state transitions."""
+    """Per-shard circuit breakers fed by detector state transitions.
 
-    def __init__(self, detector, clock, config: BreakerConfig | None = None):
+    Trips land in the registry as ``stream_breaker_trips_total{shard}``;
+    ``trips`` is the aggregate view over that series."""
+
+    def __init__(
+        self,
+        detector,
+        clock,
+        config: BreakerConfig | None = None,
+        metrics=None,
+    ):
         self.detector = detector
         self.clock = clock
         self.config = config or BreakerConfig()
         self._last_state: dict[int, str] = {}
         self._suspect_at: dict[int, deque] = {}
         self._open_until: dict[int, int] = {}
-        self.trips = 0
+        if metrics is None:
+            from repro.observability.metrics import MetricsRegistry
+
+            metrics = MetricsRegistry(clock=clock)
+        self.metrics = metrics
+
+    @property
+    def trips(self) -> int:
+        return self.metrics.total("stream_breaker_trips_total")
 
     def observe(self) -> None:
         """Snapshot detector states; record alive→suspect flips and trip
@@ -76,7 +93,9 @@ class BreakerBoard:
                     dq.popleft()
                 if len(dq) >= cfg.trip_after and not self.is_open(slot):
                     self._open_until[slot] = now + cfg.cooldown_us
-                    self.trips += 1
+                    self.metrics.counter(
+                        "stream_breaker_trips_total", shard=str(slot)
+                    ).inc()
             elif state == REMOVED:
                 # the detector formally failed it: membership takes over,
                 # the breaker's flap history is moot
@@ -129,15 +148,36 @@ class HedgedReader:
         breakers: BreakerBoard,
         hedge_after_us: int,
         probe=None,
+        metrics=None,
+        tracer=None,
+        clock=None,
     ):
         self.store = store
         self.detector = detector
         self.breakers = breakers
         self.hedge_after_us = int(hedge_after_us)
         self.probe = probe if probe is not None else (lambda shard: 100)
-        self.reads = 0
-        self.hedge_launched = 0
-        self.hedge_won = 0
+        self.metrics = metrics if metrics is not None else breakers.metrics
+        self.tracer = tracer
+        self.clock = clock if clock is not None else breakers.clock
+        self._reads = self.metrics.counter("stream_reads_total")
+        self._hedge_launched = self.metrics.counter(
+            "stream_hedge_launched_total"
+        )
+        self._hedge_won = self.metrics.counter("stream_hedge_won_total")
+
+    #: registry-backed counters, exposed under the historical names
+    @property
+    def reads(self) -> int:
+        return self._reads.value
+
+    @property
+    def hedge_launched(self) -> int:
+        return self._hedge_launched.value
+
+    @property
+    def hedge_won(self) -> int:
+        return self._hedge_won.value
 
     def _is_suspect(self, shard: int) -> bool:
         try:
@@ -161,11 +201,17 @@ class HedgedReader:
             alt = candidates[1]
             a_lat = self.hedge_after_us + int(self.probe(alt))
             hedged = True
-            self.hedge_launched += 1
+            self._hedge_launched.inc()
             if a_lat < p_lat:
                 winner, latency = alt, a_lat
-                self.hedge_won += 1
-        self.reads += 1
+                self._hedge_won.inc()
+        self._reads.inc()
+        self.metrics.histogram("stream_read_latency_us").observe(latency)
+        if self.tracer is not None:
+            now = self.clock.now_us()
+            self.tracer.record(
+                "read", now, now + latency, shard=winner, hedged=hedged
+            )
         return HedgedRead(
             key_index=key_index,
             shard=winner,

@@ -62,6 +62,13 @@ import dataclasses
 
 import numpy as np
 
+from repro.observability import (
+    LoadConfig,
+    LoadMonitor,
+    MetricsRegistry,
+    SpanTrace,
+    expected_peak_over_mean,
+)
 from repro.placement.elastic import FailureDomain
 from repro.placement.store import StorePlacement
 from repro.serving.batch_router import BatchRouter
@@ -713,7 +720,13 @@ class _StreamingRunner:
     12. **monotone shedding** — shed fraction never *decreases* as offered
         load steps up (overload ramp);
     13. **holder-only hedging** — a (possibly hedged) read returns a shard
-        that actually holds the key, never a non-holder.
+        that actually holds the key, never a non-holder;
+    14. **telemetry fidelity** — the shared registry/trace/load-monitor
+        agree with ground truth at quiescence: served counter == requests
+        consumed == ``request`` span count, the device load accumulator
+        drains to exactly the number of keys dispatched, observed
+        peak/mean stays inside the balance envelope, and no theory-bound
+        alarm (balance drift / disruption bound) fired mid-storyline.
     """
 
     #: detector thresholds compressed to a sub-second virtual timescale so
@@ -743,6 +756,19 @@ class _StreamingRunner:
         self.repairer = PlacementRepairer(
             self.store, self.mgr, budget_per_tick=64
         )
+        # one shared telemetry plane across every front end the storyline
+        # builds: registry on the virtual clock, one span trace, and the
+        # device-side load accumulator drained only at explicit checkpoints
+        self.metrics = MetricsRegistry(clock=self.clock)
+        self.trace = SpanTrace(capacity=1 << 15)
+        self.alarms: list = []
+        self.monitor = LoadMonitor(
+            self.router,
+            metrics=self.metrics,
+            config=LoadConfig(drain_every=1 << 30),
+            on_alarm=self.alarms.append,
+        )
+        self.total_served = 0
         self.res = ScenarioResult(kind=kind, engine=engine, seed=seed)
         #: service multiplier scripted by the storyline (latency spikes)
         self.spike_mult = 1.0
@@ -798,10 +824,13 @@ class _StreamingRunner:
             dispatch_fn=LifecycleDispatch(self.mgr, on_events=on_events),
             service_model=self._service_model,
             probe=self._probe,
+            metrics=self.metrics,
+            tracer=self.trace,
         )
 
     # -- invariant checks -----------------------------------------------------
     def _consume(self, results) -> int:
+        self.total_served += len(results)
         for r in results:
             self.res.route_attempts += 1
             if r.deadline_miss_us > self.MAX_WAIT_US:
@@ -887,6 +916,40 @@ class _StreamingRunner:
         except AssertionError as e:
             self._flag(f"replay parity: {e}")
 
+    def check_telemetry(self) -> None:
+        """Invariant 14: registry, trace and device load accumulator agree
+        with ground truth at quiescence; no theory-bound alarm fired."""
+        self.monitor.drain()
+        served = self.metrics.total("stream_served_total")
+        if served != self.total_served:
+            self._flag(
+                f"registry served counter {served} != requests consumed "
+                f"{self.total_served}"
+            )
+        if self.trace.count("request") != self.total_served:
+            self._flag(
+                f"request span count {self.trace.count('request')} != "
+                f"requests consumed {self.total_served}"
+            )
+        if self.monitor.total_keys != self.total_served:
+            self._flag(
+                f"device load accumulator drained {self.monitor.total_keys} "
+                f"keys != {self.total_served} dispatched"
+            )
+        ratio = self.monitor.peak_over_mean()
+        if ratio is not None and self.monitor.total_keys >= 256:
+            cfg = self.monitor.config
+            envelope = cfg.balance_mult * expected_peak_over_mean(
+                self.monitor.total_keys, self.n_alive
+            )
+            if ratio > envelope:
+                self._flag(
+                    f"post-quiesce peak/mean {ratio:.3f} outside the "
+                    f"balance envelope {envelope:.3f}"
+                )
+        for alarm in self.alarms:
+            self._flag(f"theory-bound alarm fired: {alarm}")
+
 
 def _run_overload(s: _StreamingRunner) -> None:
     """Offered load ramps from half capacity to 4x: below capacity nothing
@@ -915,16 +978,21 @@ def _run_overload(s: _StreamingRunner) -> None:
     victims = [v for v in s.alive_slots[:-1]]
     if victims:
         victim = int(s.rng.choice(victims))
+        s.monitor.drain()  # baseline the disruption tracker pre-fail
         s.mgr.fail(victim)
         s.res.events += 1
         fe = s.make_frontend()
         s.drive(fe, n_requests=80, gap_us=int(capacity_gap * 2), slo_us=4_000)
         for _ in range(6):
             s.read_probe(fe, int(s.rng.integers(0, N_PROBE)))
+        # epoch advanced: this drain scores the live moved fraction of the
+        # probe set against the delta/n disruption bound
+        s.monitor.drain()
         s.mgr.recover(victim)
         s.res.events += 1
     s.quiesce()
     s.check_replay()
+    s.check_telemetry()
 
 
 def _run_latency_spike(s: _StreamingRunner) -> None:
@@ -1002,6 +1070,7 @@ def _run_latency_spike(s: _StreamingRunner) -> None:
         s._flag("recovered shard never readmitted under serve traffic")
     s.quiesce()
     s.check_replay()
+    s.check_telemetry()
 
 
 _STORYLINES = {

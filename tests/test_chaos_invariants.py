@@ -7,7 +7,14 @@ grid small enough for tier-1 but covering every scenario kind x engine.
 import numpy as np
 import pytest
 
-from chaos import KINDS, PROBE_KEYS, base_buckets, run_scenario
+from chaos import (
+    KINDS,
+    PROBE_KEYS,
+    _STORYLINES,
+    _StreamingRunner,
+    base_buckets,
+    run_scenario,
+)
 
 ENGINES = ("binomial", "jump")
 SEEDS = (11, 23, 37)
@@ -42,6 +49,23 @@ def test_cascade_reaches_unavailable_and_returns(engine):
     # attempts are (correctly) answered with FleetUnavailableError
     assert res.route_unavailable > 0
     assert res.availability < 1.0
+
+
+def test_streaming_telemetry_deterministic_under_virtual_clock():
+    """Two identical virtual-clock runs serialize the ENTIRE telemetry
+    plane identically — histogram contents, span ring, µs timestamps,
+    device load totals (the registry's determinism contract)."""
+    from repro.observability import to_json
+
+    def run_once():
+        runner = _StreamingRunner("overload", "binomial", 11, 8)
+        _STORYLINES["overload"](runner)
+        assert runner.res.violations == []
+        return to_json(
+            runner.metrics, trace=runner.trace, monitor=runner.monitor
+        )
+
+    assert run_once() == run_once()
 
 
 def test_base_buckets_cached_and_in_range():
